@@ -1,0 +1,3 @@
+# The paper's scheme emulates FP64 GEMMs; x64 must be on before jax init.
+import os
+os.environ.setdefault("JAX_ENABLE_X64", "true")

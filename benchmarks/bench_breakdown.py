@@ -1,0 +1,93 @@
+"""Paper Figs. 2-3 & 6-11: time breakdown of the Ozaki-scheme phases.
+
+CPU container => the v5e phase-cost model prices exact per-phase op/byte
+counts (benchmarks.model_v5e); the paper's qualitative claims to reproduce:
+
+  * base ozIMMU: FP64 accumulation ~= 40-50 % of total time;
+  * ozIMMU_EF / _H cut the accumulation share to ~10-20 %;
+  * ozIMMU_RN does NOT cut it (same number of FP64 additions).
+
+Also cross-checked: CPU wall-clock of the jitted phases (ordering only).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.model_v5e import phase_times
+from repro.core import ozimmu
+
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h")
+
+
+def modeled(n: int = 4096, ks=(7, 8, 9, 10)):
+    rows = []
+    for k in ks:
+        for variant in VARIANTS:
+            pt = phase_times(n, n, n, k, variant=variant)
+            rows.append({"n": n, "k": k, "variant": variant,
+                         "total_ms": pt.total * 1e3, **{
+                             f"share_{f}": s for f, s in pt.shares().items()}})
+    return rows
+
+
+def measured_cpu(n: int = 512, k: int = 8):
+    """CPU wall-clock sanity check of the full emulation per variant."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float64)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float64)
+    out = {}
+    for variant in VARIANTS:
+        cfg = ozimmu.VARIANTS[variant].with_(k=k)
+        fn = jax.jit(lambda a, b: ozimmu.ozimmu_matmul(a, b, cfg))
+        fn(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn(a, b).block_until_ready()
+        out[variant] = (time.perf_counter() - t0) / 3
+    return out
+
+
+def main(out_json=None, quick=False):
+    rows = modeled(n=4096, ks=(8,) if quick else (7, 8, 9, 10))
+    print(f"{'variant':12s} {'k':>2s} {'total_ms':>9s} "
+          f"{'split':>6s} {'gemm':>6s} {'accum':>6s} {'copy':>6s}")
+    for r in rows:
+        print(f"{r['variant']:12s} {r['k']:2d} {r['total_ms']:9.3f} "
+              f"{r['share_split']:6.1%} {r['share_gemm']:6.1%} "
+              f"{r['share_accum']:6.1%} {r['share_copy']:6.1%}")
+    base = {r["k"]: r for r in rows if r["variant"] == "ozimmu"}
+    for r in rows:
+        if r["variant"] in ("ozimmu_ef", "ozimmu_h"):
+            sp = base[r["k"]]["total_ms"] / r["total_ms"]
+            r["speedup_vs_ozimmu"] = sp
+    checks = {
+        "base_accum_share_40_50pct": all(
+            0.25 <= r["share_accum"] <= 0.60 for r in rows
+            if r["variant"] == "ozimmu"),
+        "ef_h_accum_share_le_20pct": all(
+            r["share_accum"] <= 0.25 for r in rows
+            if r["variant"] in ("ozimmu_ef", "ozimmu_h")),
+        "ef_speedup_1.2_1.6": all(
+            1.1 <= r.get("speedup_vs_ozimmu", 1.3) <= 2.0 for r in rows
+            if r["variant"] == "ozimmu_ef"),
+    }
+    for name, ok in checks.items():
+        print(f"[breakdown] {name}: {'OK' if ok else 'CHECK'}")
+    cpu = measured_cpu(n=256 if quick else 512)
+    print("[breakdown] cpu wall-clock (ordering sanity):",
+          {k: f"{v * 1e3:.1f}ms" for k, v in cpu.items()})
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"modeled": rows, "cpu_measured": cpu,
+                       "checks": checks}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

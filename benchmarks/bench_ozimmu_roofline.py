@@ -1,0 +1,75 @@
+"""Paper-representative roofline: lower `ozimmu_matmul` itself and derive
+the three terms from the compiled HLO (the §Perf "cell C").
+
+Single-chip analysis (the emulated GEMM is the per-chip building block —
+distribution shards the outer GEMM dims, not the scheme).  Compute time
+prices int8 dots at the 394 TOP/s MXU int8 peak and float ops at 197
+TFLOP/s; memory at 819 GB/s.
+
+    PYTHONPATH=src python -m benchmarks.bench_ozimmu_roofline [--n 4096]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ozimmu
+from repro.launch import hlo_cost
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+
+
+def analyze_variant(spec: str, n: int, dtype=jnp.float32):
+    cfg = ozimmu.parse_spec(spec)
+    a = jax.ShapeDtypeStruct((n, n), dtype)
+    b = jax.ShapeDtypeStruct((n, n), dtype)
+    lowered = jax.jit(
+        lambda a, b: ozimmu.ozimmu_matmul(a, b, cfg)).lower(a, b)
+    compiled = lowered.compile()
+    t = hlo_cost.analyze(compiled.as_text())
+    int8 = t["int8_dot_flops"]
+    other = t["flops"] - int8
+    t_compute = int8 / PEAK_INT8 + other / PEAK_BF16
+    t_memory = t["bytes"] / HBM_BW
+    total = max(t_compute, t_memory)
+    eff_tflops = 2.0 * n ** 3 / total / 1e12
+    return {
+        "spec": spec, "n": n,
+        "int8_dot_flops": int8, "other_flops": other, "bytes": t["bytes"],
+        "t_compute_ms": t_compute * 1e3, "t_memory_ms": t_memory * 1e3,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "emulated_tflops_bound": eff_tflops,
+    }
+
+
+def main(out_json=None, quick=False, n=None):
+    n = n or (1024 if quick else 4096)
+    rows = []
+    print(f"{'spec':22s} {'t_comp':>8s} {'t_mem':>8s} {'bound':>7s} "
+          f"{'emulTFLOPS':>10s}  (n={n})")
+    for spec in ("ozimmu-8", "ozimmu_rn-8", "ozimmu_ef-8", "ozimmu_h-8",
+                 "ozimmu_h-8:df32", "ozimmu_h-8:f32"):
+        r = analyze_variant(spec, n,
+                            jnp.float64 if spec.endswith("-8") or
+                            ":f64" in spec else jnp.float32)
+        rows.append(r)
+        print(f"{r['spec']:22s} {r['t_compute_ms']:7.2f}m "
+              f"{r['t_memory_ms']:7.2f}m {r['bound']:>7s} "
+              f"{r['emulated_tflops_bound']:10.1f}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(n=args.n, quick=args.quick)

@@ -1,0 +1,52 @@
+"""Paper Figs. 12-13: emulated-GEMM throughput (TFLOPS) vs n per variant/k.
+
+Modeled on the v5e phase-cost model (CPU container).  Paper claims to
+reproduce structurally: EF/H faster than base ozIMMU everywhere (1.2-1.6x),
+RN slower than base (extra rowmax passes), throughput grows with n (GEMM
+amortizes the memory-bound phases) and falls with k (quadratic pair count).
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.model_v5e import emulated_tflops
+
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h")
+
+
+def run(ns=(1024, 2048, 4096, 8192, 16384), ks=(3, 7, 8, 12)):
+    rows = []
+    for n in ns:
+        for k in ks:
+            for variant in VARIANTS:
+                tf = emulated_tflops(n, n, n, k, variant=variant)
+                rows.append({"n": n, "k": k, "variant": variant,
+                             "tflops": tf})
+    return rows
+
+
+def main(out_json=None, quick=False):
+    rows = run(ns=(1024, 4096) if quick else (1024, 2048, 4096, 8192, 16384),
+               ks=(3, 8) if quick else (3, 7, 8, 12))
+    idx = {(r["n"], r["k"], r["variant"]): r["tflops"] for r in rows}
+    print(f"{'n':>6s} {'k':>3s}  " + "  ".join(f"{v:>10s}" for v in VARIANTS)
+          + "   EF/base  H/base")
+    checks_ef = []
+    for n in sorted({r["n"] for r in rows}):
+        for k in sorted({r["k"] for r in rows}):
+            vals = [idx[(n, k, v)] for v in VARIANTS]
+            ef_ratio = vals[2] / vals[0]
+            h_ratio = vals[3] / vals[0]
+            checks_ef.append(ef_ratio > 1.05)
+            print(f"{n:6d} {k:3d}  " + "  ".join(f"{v:10.1f}" for v in vals)
+                  + f"   {ef_ratio:6.2f}  {h_ratio:6.2f}")
+    ok = all(checks_ef)
+    print(f"[throughput] EF > base everywhere: {'OK' if ok else 'CHECK'}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

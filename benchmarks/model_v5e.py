@@ -1,0 +1,90 @@
+"""Analytic phase-cost model of the Ozaki scheme on TPU-v5e-like hardware.
+
+The container is CPU-only, so the paper's wall-clock figures (Figs. 2-3,
+6-13) are reproduced STRUCTURALLY: per-phase op/byte counts (exact, from the
+algorithms) are priced with the v5e roofline constants.  The CPU runs
+validate semantics; this model orders the variants the same way the paper's
+GPU measurements do, because the phase ratios (int8 MACs vs high-precision
+element passes) are hardware-agnostic up to the peak ratios.
+
+Phases (paper steps):
+  split   (i)+(ii)  memory-bound: extraction passes over A and B
+  gemm    (iii)     compute-bound: int8 MACs on the MXU
+  accum   (iv)      memory-bound: convert+scale+add passes over (m, p)
+  copy    (v)       memory-bound: one pass over C
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accumulate import num_highprec_adds
+from repro.core.splitting import compute_beta, compute_r
+
+PEAK_INT8 = 394e12      # MACs*2 per second (ops/s)
+HBM_BW = 819e9
+
+_BYTES_HP = {"f64": 8, "f32": 4, "df32": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTimes:
+    split: float
+    gemm: float
+    accum: float
+    copy: float
+
+    @property
+    def total(self) -> float:
+        return self.split + self.gemm + self.accum + self.copy
+
+    def shares(self) -> dict:
+        t = self.total
+        return {f: getattr(self, f) / t for f in
+                ("split", "gemm", "accum", "copy")}
+
+
+def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
+                accum_dtype: str = "f64", in_bytes: int = 8,
+                fused_split: bool = True) -> PhaseTimes:
+    """Modeled seconds per phase on one v5e chip.
+
+    variant: ozimmu | ozimmu_rn | ozimmu_ef | ozimmu_h.
+    fused_split: single-HBM-read fused extraction (our Pallas kernel);
+    False models Ootomo-style per-slice passes.
+    """
+    beta = compute_beta(n)
+    r = compute_r(n, beta)
+    group_ef = variant in ("ozimmu_ef", "ozimmu_h")
+    hp_b = _BYTES_HP[accum_dtype]
+
+    # --- split: read A (m*n) and B (n*p) in input precision, write k int8
+    # slices (+ scale vectors, negligible).  RN-adaptive (ozimmu_rn)
+    # recomputes the row max per slice -> k extra read passes.
+    reads = 1 if fused_split else k
+    if variant == "ozimmu_rn":
+        reads += k - 1   # per-slice rowmax pass over the residual
+    split_bytes = (m * n + n * p) * (reads * in_bytes + k * 1)
+    t_split = split_bytes / HBM_BW
+
+    # --- gemm: k(k+1)/2 int8 pair GEMMs (fast mode).  Group-EF performs the
+    # same MACs but fewer kernel launches (concatenated contraction) — MAC
+    # count identical, so same compute time; the win is in `accum`.
+    pairs = k * (k + 1) // 2
+    t_gemm = pairs * 2.0 * m * n * p / PEAK_INT8
+
+    # --- accum: per high-precision term, read int32 product (4B) + RMW of
+    # the hp accumulator (2*hp_b) over (m, p).
+    hp_terms = num_highprec_adds(k, r, group_ef)
+    accum_bytes = hp_terms * m * p * (4 + 2 * hp_b)
+    t_accum = accum_bytes / HBM_BW
+
+    # --- copy: C <- alpha D + beta C, one read+write of (m, p)
+    t_copy = 2.0 * m * p * hp_b / HBM_BW
+
+    return PhaseTimes(t_split, t_gemm, t_accum, t_copy)
+
+
+def emulated_tflops(m: int, n: int, p: int, k: int, **kw) -> float:
+    """Emulated-GEMM throughput: 2mnp / modeled time, in TFLOP/s."""
+    t = phase_times(m, n, p, k, **kw).total
+    return 2.0 * m * n * p / t / 1e12

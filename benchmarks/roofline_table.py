@@ -1,0 +1,68 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table (markdown to stdout).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(sec: float) -> str:
+    if sec >= 1.0:
+        return f"{sec:.2f}s"
+    return f"{sec * 1e3:.2f}ms"
+
+
+def load(dirname: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="pod16x16 | pod2x16x16 | all")
+    args = ap.parse_args(argv)
+    rows = load(args.dir)
+    if args.mesh != "all":
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("| arch | shape | mesh | t_comp | t_mem | t_coll | bound | "
+          "useful/HLO | MFU-bound | HBM GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        rl = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        dev_gb = (mem.get("argument_size_in_bytes", 0) +
+                  mem.get("output_size_in_bytes", 0) -
+                  mem.get("alias_size_in_bytes", 0) +
+                  mem.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_t(rl['t_compute'])} | {fmt_t(rl['t_memory'])} "
+              f"| {fmt_t(rl['t_collective'])} | {rl['bottleneck'][:4]} "
+              f"| {rl['useful_flops_fraction']:.2f} "
+              f"| {rl['mfu_bound']:.3f} | {dev_gb:.1f} |")
+
+    # summary stats
+    if rows:
+        from collections import Counter
+        c = Counter(r["roofline"]["bottleneck"] for r in rows)
+        print(f"\nbottleneck distribution: {dict(c)}")
+        worst = min((r for r in rows if r["shape"].startswith("train")),
+                    key=lambda r: r["roofline"]["mfu_bound"], default=None)
+        if worst:
+            print(f"worst train-cell MFU-bound: {worst['arch']} x "
+                  f"{worst['shape']} = {worst['roofline']['mfu_bound']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness entry point: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--out experiments/bench]
+
+Benches:
+  accuracy    Figs. 1/5   — measured error vs k, phi (dd reference)
+  breakdown   Figs. 2-3, 6-11 — phase-time shares (v5e model + CPU sanity)
+  throughput  Figs. 12-13 — emulated TFLOPS vs n (v5e model)
+  pareto      Fig. 14     — measured error vs modeled TFLOPS
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks import (bench_accuracy, bench_breakdown,
+                            bench_ozimmu_roofline, bench_pareto,
+                            bench_throughput)
+    benches = {
+        "accuracy": bench_accuracy.main,
+        "breakdown": bench_breakdown.main,
+        "throughput": bench_throughput.main,
+        "pareto": bench_pareto.main,
+        # roofline terms of the emulated GEMM itself, from compiled HLO
+        # (n=2048 keeps the harness fast; §Perf Cell C uses 4096/8192)
+        "ozimmu_roofline": lambda out_json=None, quick=False:
+            bench_ozimmu_roofline.main(out_json=out_json, quick=True),
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    failures = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        print(f"\n===== bench: {name} =====")
+        t0 = time.time()
+        try:
+            fn(out_json=os.path.join(args.out, f"{name}.json"),
+               quick=args.quick)
+            print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nFAILED benches:", failures)
+        sys.exit(1)
+    print("\nall benches complete; JSON in", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: emulate a high-precision GEMM with INT8 slice products.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the public API at the three levels you would actually use it:
+  1. `ozimmu_matmul`   — drop-in accurate GEMM (the paper's contribution)
+  2. `MatmulEngine`    — the pluggable backend every model layer uses
+  3. variant comparison — the paper's four configurations on one matrix
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "true")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ozimmu
+from repro.core.engine import make_engine
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 256
+    # difficult matrices (phi=1): wide exponent range
+    a = (rng.uniform(size=(n, n)) - 0.5) * np.exp(rng.standard_normal((n, n)))
+    b = (rng.uniform(size=(n, n)) - 0.5) * np.exp(rng.standard_normal((n, n)))
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+    exact = np.asarray(aj @ bj)  # fp64 reference
+
+    # 1. drop-in accurate GEMM (paper variant ozIMMU_H, k=8)
+    cfg = ozimmu.parse_spec("ozimmu_h-8")
+    c = ozimmu.ozimmu_matmul(aj, bj, cfg)
+    err = np.max(np.abs(np.asarray(c) - exact) / np.maximum(np.abs(exact),
+                                                            1e-300))
+    print(f"ozimmu_h-8 vs fp64:  max rel err = {err:.2e}")
+
+    # 2. the engine abstraction used by every model layer
+    eng = make_engine("ozimmu_h-8")
+    x = jnp.asarray(rng.standard_normal((4, 64, n)))
+    w = jnp.asarray(rng.standard_normal((n, 128)))
+    y = eng(x, w)
+    print(f"engine contraction:  {x.shape} @ {w.shape} -> {y.shape}")
+
+    # 3. the paper's four variants at k=8
+    print(f"\n{'variant':12s} {'max rel err':>12s}  (k=8, n={n}, phi=1)")
+    for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+        c = ozimmu.ozimmu_matmul(aj, bj, ozimmu.VARIANTS[name].with_(k=8))
+        err = np.max(np.abs(np.asarray(c) - exact) /
+                     np.maximum(np.abs(exact), 1e-300))
+        print(f"{name:12s} {err:12.2e}")
+    print("\nRN/H (round-to-nearest splitting) are ~1 slice more accurate;")
+    print("EF/H (group-wise error-free accumulation) are 1.2-1.7x faster.")
+
+
+if __name__ == "__main__":
+    main()

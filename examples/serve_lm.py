@@ -1,0 +1,18 @@
+"""Batched serving example: greedy decode with a continuous-batching server.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2_780m]
+
+Runs the reduced config of any assigned architecture through the serving
+stack (slot-based batcher, KV/state caches, fixed-shape decode step) and
+reports tokens/s.  Works for every family: dense/MoE KV caches, MLA latent
+cache, SSM constant state, hybrid ring buffers, VLM/enc-dec cross caches.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

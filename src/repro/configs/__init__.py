@@ -1,0 +1,81 @@
+"""Architecture registry: one module per assigned arch, each exposing
+``full()`` (the exact published config) and ``smoke()`` (a reduced
+same-family config for CPU tests), plus optional per-arch sharding-rule
+overrides and shape skips.
+
+Shapes (assignment): every arch pairs with the four LM shapes below;
+``decode_*``/``long_*`` lower ``serve_step``; ``long_500k`` only runs for
+sub-quadratic families (ssm, hybrid) — full-attention archs record SKIP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = (
+    "starcoder2_3b",
+    "phi4_mini_3_8b",
+    "internlm2_1_8b",
+    "deepseek_7b",
+    "deepseek_moe_16b",
+    "deepseek_v2_236b",
+    "llama32_vision_11b",
+    "seamless_m4t_medium",
+    "mamba2_780m",
+    "recurrentgemma_9b",
+)
+
+# accept hyphenated public names too
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_arch_module(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise ValueError(f"unknown arch {name!r}; options: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str, *, smoke: bool = False, **overrides) -> ModelConfig:
+    mod = get_arch_module(name)
+    cfg = mod.smoke() if smoke else mod.full()
+    return cfg.with_(**overrides) if overrides else cfg
+
+
+def rules_overrides(name: str) -> dict:
+    """Per-arch logical->mesh overrides merged over the base rule table."""
+    return getattr(get_arch_module(name), "RULES_OVERRIDES", {})
+
+
+def skipped_shapes(name: str):
+    """dict shape -> reason for shapes this arch does not run."""
+    return dict(getattr(get_arch_module(name), "SKIP_SHAPES", ()))
+
+
+def arch_shape_cells(include_skipped: bool = False):
+    """All (arch, shape) assignment cells — 40 total."""
+    for arch in ARCH_IDS:
+        skips = skipped_shapes(arch)
+        for shape in SHAPES:
+            if shape in skips and not include_skipped:
+                continue
+            yield arch, shape

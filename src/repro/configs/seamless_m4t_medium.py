@@ -1,0 +1,28 @@
+"""seamless-m4t-medium [audio] — enc-dec, 12L (each side) d_model=1024
+16H d_ff=4096 vocab=256206; multimodal.  [arXiv:2308.11596; hf]
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, frames=seq_len, d_model) as encoder input.
+GELU MLPs (transformer-standard for this family)."""
+from repro.models.common import ModelConfig
+
+RULES_OVERRIDES = {"cache_heads": "model"}  # kv divisible by 16
+
+SKIP_SHAPES = (
+    ("long_500k", "full O(L^2) attention (enc + cross); 524288 cell skipped"),
+)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless_m4t_medium", family="encdec",
+        n_layers=12, enc_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab=256206, rope_theta=1e4, mlp_type="gelu",
+        remat_block=4,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().with_(n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                        n_kv_heads=4, d_ff=96, vocab=256, remat_block=1,
+                        q_chunk=64, kv_chunk=64)

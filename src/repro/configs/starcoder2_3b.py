@@ -1,0 +1,26 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152; GQA + RoPE.  [arXiv:2402.19173; hf]"""
+from repro.models.common import ModelConfig
+
+# kv heads not divisible by the 16-way model axis -> the
+# decode cache shards its head_dim instead (always 16-divisible)
+RULES_OVERRIDES = {"cache_hd": "model"}
+
+SKIP_SHAPES = (
+    ("long_500k", "full O(L^2) attention; 524288-seq decode cell skipped"),
+)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2_3b", family="dense",
+        n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2,
+        d_ff=12288, vocab=49152, rope_theta=1e5,
+        remat_block=5,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=128, vocab=256, remat_block=1,
+                        q_chunk=64, kv_chunk=64)

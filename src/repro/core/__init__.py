@@ -1,0 +1,8 @@
+"""Core: the paper's contribution — Ozaki-scheme GEMM emulation on int8 MMUs."""
+from repro.core.splitting import (Split, compute_beta, compute_r,
+                                  split_bitmask, split_rn, split_rn_const,
+                                  reconstruct, residual)
+from repro.core.accumulate import (int8_gemm, matmul_naive, matmul_group_ef,
+                                   DF32, num_highprec_adds)
+from repro.core.ozimmu import OzimmuConfig, VARIANTS, ozimmu_matmul, parse_spec
+from repro.core.engine import MatmulEngine, make_engine

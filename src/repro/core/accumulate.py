@@ -1,0 +1,229 @@
+"""Slice-product evaluation + accumulation for the Ozaki scheme.
+
+Two evaluation strategies from the paper:
+
+  * ``matmul_naive``    — Alg. 4: one INT8 GEMM per slice pair (s, t) with
+    s+t <= k+1, each converted to high precision, scaled, and added.
+    k(k+1)/2 high-precision matrix additions.
+  * ``matmul_group_ef`` — Alg. 6/7 (proposed): all pairs on an anti-diagonal
+    group g = s+t share the exponent 2^(-beta*g), so they are summed
+    *inside the integer matmul unit*.  On TPU we realize this by
+    concatenating the group's slices along the contraction axis and issuing
+    ONE int8 GEMM with inner dimension (g-1)*n — the MXU's INT32 accumulator
+    performs the group reduction as part of the contraction (error-free for
+    group sizes <= r, eq. (12); larger groups are chunked, reproducing
+    Alg. 6's ``q == r`` flush).  k (or w, eq. for chunking) high-precision
+    additions total.
+
+High-precision accumulator modes:
+
+  * ``f64``  — faithful to the paper (FP64 accumulation).  On TPU this is
+    software-emulated; used for CPU validation and the DGEMM-emulation bench.
+  * ``f32``  — plain f32 accumulation (sufficient for emulating f32 GEMMs
+    when combined with EF grouping).
+  * ``df32`` — double-float (two-float compensated) accumulation: TPU-native
+    high-precision mode, ~2^-48 effective significand.  INT32 products are
+    converted to an exact (hi, lo) f32 pair, scaled by powers of two
+    (exact), and accumulated with Knuth TwoSum.  This is our beyond-paper
+    replacement for FP64 accumulation on hardware without FP64 units.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splitting import Split, compute_r
+
+__all__ = [
+    "int8_gemm",
+    "matmul_naive",
+    "matmul_group_ef",
+    "DF32",
+    "num_highprec_adds",
+]
+
+
+def int8_gemm(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """(m, n) int8 @ (n, p) int8 -> (m, p) int32, exact barring overflow."""
+    return jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# double-float (two-float) arithmetic — the TPU-native high-precision path
+# ---------------------------------------------------------------------------
+
+class DF32(NamedTuple):
+    """Unevaluated sum hi + lo of two f32 arrays, |lo| <= ulp(hi)/2."""
+
+    hi: jax.Array
+    lo: jax.Array
+
+    def to_float(self, dtype=jnp.float64) -> jax.Array:
+        return self.hi.astype(dtype) + self.lo.astype(dtype)
+
+
+def _two_sum(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Knuth TwoSum: a + b = s + e exactly."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def df32_zero(shape, dtype=jnp.float32) -> DF32:
+    z = jnp.zeros(shape, dtype)
+    return DF32(z, z)
+
+
+def df32_add(c: DF32, x: jax.Array) -> DF32:
+    """c += x with compensated two-float accumulation."""
+    hi, e = _two_sum(c.hi, x)
+    lo = c.lo + e
+    # cheap renormalization (fast-two-sum; hi dominates lo)
+    hi2, e2 = _two_sum(hi, lo)
+    return DF32(hi2, e2)
+
+
+def df32_add_df(c: DF32, x: DF32) -> DF32:
+    hi, e = _two_sum(c.hi, x.hi)
+    lo = c.lo + e + x.lo
+    hi2, e2 = _two_sum(hi, lo)
+    return DF32(hi2, e2)
+
+
+def int32_to_df32(p: jax.Array) -> DF32:
+    """Exact int32 -> (hi, lo) f32 pair (f32 holds only 24 bits).
+
+    Integer split: hi = p with the low 8 bits cleared (a multiple of 256 with
+    <= 23 significant bits — exact in f32), lo = the low 8 bits.  Pure integer
+    ops; no f64 round-trip, so it is TPU-native.
+    """
+    hi_int = (p >> 8) << 8
+    lo_int = p - hi_int  # in [0, 255]
+    return DF32(hi_int.astype(jnp.float32), lo_int.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# scaling helpers
+# ---------------------------------------------------------------------------
+
+def _outer_scale(p: jax.Array, sa: jax.Array, sb: jax.Array) -> jax.Array:
+    """diag(sa) @ p @ diag(sb); scales are powers of two (exact in fp)."""
+    return p * sa[:, None] * sb[None, :]
+
+
+def _term_pairs(k: int) -> Sequence[Tuple[int, int]]:
+    """Fast-mode slice pairs (1-indexed): s + t <= k + 1."""
+    return [(s, g - s) for g in range(2, k + 2) for s in range(1, g)]
+
+
+def num_highprec_adds(k: int, r: int, group_ef: bool) -> int:
+    """Number of high-precision matrix additions (paper's accounting)."""
+    if not group_ef:
+        return k * (k + 1) // 2
+    total = 0
+    for g in range(2, k + 2):
+        total += -(-(g - 1) // r)  # ceil((g-1)/r) chunks for group g
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Alg. 4 — naive accumulation
+# ---------------------------------------------------------------------------
+
+def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
+                 out_dtype=None) -> jax.Array:
+    """One INT8 GEMM + one high-precision scaled add per slice pair."""
+    assert sa.axis == 0 and sb.axis == 1, "A needs row scales, B column scales"
+    k = sa.digits.shape[0]
+    assert sb.digits.shape[0] == k
+    m, p = sa.digits.shape[1], sb.digits.shape[2]
+    out_dtype = out_dtype or sa.scale.dtype
+
+    if accum == "df32":
+        acc = df32_zero((m, p))
+        for s, t in _term_pairs(k):
+            prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1])
+            term = int32_to_df32(prod)
+            scale_a = sa.scale[s - 1].astype(jnp.float32)
+            scale_b = sb.scale[t - 1].astype(jnp.float32)
+            term = DF32(_outer_scale(term.hi, scale_a, scale_b),
+                        _outer_scale(term.lo, scale_a, scale_b))
+            acc = df32_add_df(acc, term)
+        return acc.to_float(out_dtype)
+
+    acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
+    c = jnp.zeros((m, p), acc_dtype)
+    for s, t in _term_pairs(k):
+        prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1]).astype(acc_dtype)
+        c = c + _outer_scale(prod, sa.scale[s - 1].astype(acc_dtype),
+                             sb.scale[t - 1].astype(acc_dtype))
+    return c.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 6/7 — group-wise error-free accumulation
+# ---------------------------------------------------------------------------
+
+def _group_chunks(k: int, r: int):
+    """Yield (g, [(s, t), ...]) chunks of size <= r per anti-diagonal group."""
+    for g in range(2, k + 2):
+        pairs = [(s, g - s) for s in range(1, g)]
+        for i in range(0, len(pairs), r):
+            yield g, pairs[i:i + r]
+
+
+def group_gemm_concat(sa: Split, sb: Split, pairs) -> jax.Array:
+    """sum_{(s,t) in pairs} A_s @ B_t as ONE int8 GEMM via contraction-axis
+    concatenation — the TPU-native realization of Alg. 6's INT32 group sum."""
+    a_cat = jnp.concatenate([sa.digits[s - 1] for s, _ in pairs], axis=1)
+    b_cat = jnp.concatenate([sb.digits[t - 1] for _, t in pairs], axis=0)
+    return int8_gemm(a_cat, b_cat)
+
+
+def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
+                    out_dtype=None, r: Optional[int] = None,
+                    group_gemm_fn=None) -> jax.Array:
+    """Group-wise error-free accumulation (Alg. 6; Alg. 7 when r >= k).
+
+    Requires geometric slice scales (``base`` present): the combined scale of
+    every pair in group g is ``baseA (x) baseB * 2^(-beta*g)``.
+    """
+    assert sa.axis == 0 and sb.axis == 1
+    if sa.base is None or sb.base is None:
+        raise ValueError("group-EF accumulation needs geometric slice scales "
+                         "(bitmask or rn_const splitting); got adaptive RN")
+    k = sa.digits.shape[0]
+    beta = sa.beta
+    n = sa.digits.shape[2]
+    m, p = sa.digits.shape[1], sb.digits.shape[2]
+    out_dtype = out_dtype or sa.scale.dtype
+    if r is None:
+        r = compute_r(n, beta)
+    gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
+
+    if accum == "df32":
+        acc = df32_zero((m, p))
+        base_a = sa.base.astype(jnp.float32)
+        base_b = sb.base.astype(jnp.float32)
+        for g, pairs in _group_chunks(k, r):
+            prod = gg(pairs)
+            e = jnp.asarray(2.0 ** (-beta * g), jnp.float32)
+            term = int32_to_df32(prod)
+            term = DF32(_outer_scale(term.hi, base_a, base_b) * e,
+                        _outer_scale(term.lo, base_a, base_b) * e)
+            acc = df32_add_df(acc, term)
+        return acc.to_float(out_dtype)
+
+    acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
+    c = jnp.zeros((m, p), acc_dtype)
+    base_a = sa.base.astype(acc_dtype)
+    base_b = sb.base.astype(acc_dtype)
+    for g, pairs in _group_chunks(k, r):
+        prod = gg(pairs).astype(acc_dtype)
+        e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
+        c = c + _outer_scale(prod, base_a, base_b) * e
+    return c.astype(out_dtype)

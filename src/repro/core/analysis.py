@@ -1,0 +1,96 @@
+"""Rounding-error bounds from §5 of the paper, plus op-count accounting.
+
+These are used by tests (the computed result must satisfy the bound) and by
+the benchmark harness (predicted-vs-measured error).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.splitting import compute_beta, compute_r
+
+__all__ = [
+    "unit_roundoff",
+    "truncation_bound",
+    "accumulation_terms_w",
+    "error_bound_ozimmu",
+    "error_bound_group_ef",
+    "flop_counts",
+]
+
+
+def unit_roundoff(dtype) -> float:
+    return {np.dtype(np.float64): 2.0 ** -53,
+            np.dtype(np.float32): 2.0 ** -24}[np.dtype(dtype)]
+
+
+def _gf(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """g f^T with g_i = ufp(max_j |a_ij|), f_j = ufp(max_i |b_ij|)."""
+    def ufp(x):
+        out = np.zeros_like(x)
+        nz = x != 0
+        out[nz] = 2.0 ** np.floor(np.log2(x[nz]))
+        return out
+    g = ufp(np.max(np.abs(a), axis=1))
+    f = ufp(np.max(np.abs(b), axis=0))
+    return np.outer(g, f)
+
+
+def truncation_bound(a: np.ndarray, b: np.ndarray, k: int,
+                     beta: int | None = None) -> np.ndarray:
+    """|AB - sum_{s+t<=k+1} A_s B_t| <= 4(k+1) n 2^(-beta k) g f^T — eq. (18)."""
+    n = a.shape[1]
+    beta = beta or compute_beta(n)
+    return 4.0 * (k + 1) * n * 2.0 ** (-beta * k) * _gf(a, b)
+
+
+def accumulation_terms_w(k: int, r: int) -> int:
+    """w = ceil(k/r) * (k - (r/2) * floor((k-1)/r)) — §5.2."""
+    return math.ceil(k / r) * (k - (r / 2) * math.floor((k - 1) / r))
+
+
+def error_bound_ozimmu(a: np.ndarray, b: np.ndarray, k: int,
+                       u: float | None = None) -> np.ndarray:
+    """Deterministic bound for Alg. 3+4 (without the k'_max sharpening):
+
+        |AB - T_k| <= 4(k+1) n 2^(-beta k) g f^T + (k(k+1)/2 - 1) u |A||B|.
+    """
+    u = u if u is not None else unit_roundoff(a.dtype)
+    tb = truncation_bound(a, b, k)
+    return tb + (k * (k + 1) / 2 - 1) * u * (np.abs(a) @ np.abs(b))
+
+
+def error_bound_group_ef(a: np.ndarray, b: np.ndarray, k: int,
+                         u: float | None = None) -> np.ndarray:
+    """Bound for Alg. 3+6: |AB - T| <= 4(k+1) n 2^(-beta k) g f^T + (w-1) u |A||B|."""
+    u = u if u is not None else unit_roundoff(a.dtype)
+    n = a.shape[1]
+    beta = compute_beta(n)
+    w = accumulation_terms_w(k, compute_r(n, beta))
+    return truncation_bound(a, b, k) + max(w - 1, 0) * u * (np.abs(a) @ np.abs(b))
+
+
+def flop_counts(m: int, n: int, p: int, k: int, *, group_ef: bool,
+                r: int | None = None) -> dict:
+    """Operation accounting for the roofline/perf model.
+
+    Returns int8 MAC count, high-precision (accumulate) element ops, and
+    split element passes — the three cost centers of the scheme.
+    """
+    beta = compute_beta(n)
+    r = r or compute_r(n, beta)
+    n_pairs = k * (k + 1) // 2
+    int8_macs = n_pairs * m * n * p
+    if group_ef:
+        from repro.core.accumulate import num_highprec_adds
+        hp_terms = num_highprec_adds(k, r, True)
+    else:
+        hp_terms = n_pairs
+    # each high-precision term: int32->float convert + 2 diag scalings + add
+    hp_elem_ops = hp_terms * m * p * 4
+    split_elem_passes = 2 * k  # k extraction passes over each operand
+    return dict(beta=beta, r=r, int8_macs=int8_macs, hp_terms=hp_terms,
+                hp_elem_ops=hp_elem_ops, split_elem_passes=split_elem_passes)

@@ -1,0 +1,69 @@
+"""MatmulEngine — the pluggable GEMM backend every model layer contracts
+through.
+
+Specs (CLI flag ``--matmul_engine``):
+
+  * ``bf16`` / ``f32`` / ``f64``      — native XLA dot in that compute dtype
+  * ``ozimmu[-k]``, ``ozimmu_rn[-k]``, ``ozimmu_ef[-k]``, ``ozimmu_h[-k]``
+    optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper).
+
+The engine is a small immutable object passed through model configs; calling
+it contracts the last axis of ``x`` with the first axis of ``w`` (the shape
+every model projection in this repo reduces to).  For ozimmu specs the
+operands are flattened to 2-D, emulated via INT8 slice GEMMs, and reshaped
+back; gradients flow through the custom VJP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ozimmu
+
+__all__ = ["MatmulEngine", "make_engine"]
+
+_NATIVE = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f64": jnp.float64}
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulEngine:
+    spec: str = "bf16"
+
+    @property
+    def is_ozimmu(self) -> bool:
+        return self.spec.split("-")[0].split(":")[0] not in _NATIVE
+
+    @property
+    def ozimmu_config(self) -> Optional[ozimmu.OzimmuConfig]:
+        return ozimmu.parse_spec(self.spec) if self.is_ozimmu else None
+
+    def __call__(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """Contract x[..., n] with w[n, ...] -> out[..., ...]."""
+        if not self.is_ozimmu:
+            dt = _NATIVE[self.spec]
+            out = jax.lax.dot_general(
+                x.astype(dt), w.astype(dt), (((x.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return out.astype(x.dtype)
+
+        cfg = self.ozimmu_config
+        n = x.shape[-1]
+        assert w.shape[0] == n, (x.shape, w.shape)
+        lead, tail = x.shape[:-1], w.shape[1:]
+        x2 = x.reshape(-1, n)
+        w2 = w.reshape(n, -1)
+        compute_dtype = jnp.float64 if cfg.accum_dtype == "f64" and \
+            jax.config.jax_enable_x64 else jnp.float32
+        out = ozimmu.ozimmu_matmul(x2.astype(compute_dtype),
+                                   w2.astype(compute_dtype), cfg)
+        return out.reshape(*lead, *tail).astype(x.dtype)
+
+
+def make_engine(spec: str) -> MatmulEngine:
+    eng = MatmulEngine(spec)
+    if eng.is_ozimmu:
+        ozimmu.parse_spec(spec)  # validate eagerly
+    return eng

@@ -1,0 +1,120 @@
+"""Public API: high-precision GEMM emulation on integer matmul units.
+
+The four named method variants of the paper:
+
+  =============  ==============  =====================  ====================
+  name           splitting       accumulation           paper
+  =============  ==============  =====================  ====================
+  ``ozimmu``     bitmask (Alg3)  naive (Alg4)           Ootomo et al. (base)
+  ``ozimmu_rn``  RN adapt (Alg5) naive (Alg4)           proposed §3.1
+  ``ozimmu_ef``  bitmask (Alg3)  group-EF (Alg6/7)      proposed §3.2
+  ``ozimmu_h``   RN const (Alg8) group-EF (Alg6/7)      proposed §3.3
+  =============  ==============  =====================  ====================
+
+``ozimmu_matmul`` is differentiable (custom VJP: the cotangent GEMMs run
+through the same emulation), jit/vmap/shard-compatible (everything is plain
+lax), and supports f64 (paper-faithful DGEMM emulation) and f32 inputs with
+``f64``/``f32``/``df32`` accumulators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accumulate, splitting
+
+__all__ = ["OzimmuConfig", "VARIANTS", "ozimmu_matmul", "parse_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OzimmuConfig:
+    k: int = 8                      # number of slices
+    split: str = "rn_const"         # bitmask | rn | rn_const
+    accumulate: str = "group_ef"    # naive | group_ef
+    accum_dtype: str = "f64"        # f64 | f32 | df32
+    use_pallas: bool = False        # route group GEMMs through the Pallas kernel
+
+    def with_(self, **kw) -> "OzimmuConfig":
+        return dataclasses.replace(self, **kw)
+
+
+VARIANTS = {
+    "ozimmu": OzimmuConfig(split="bitmask", accumulate="naive"),
+    "ozimmu_rn": OzimmuConfig(split="rn", accumulate="naive"),
+    "ozimmu_ef": OzimmuConfig(split="bitmask", accumulate="group_ef"),
+    "ozimmu_h": OzimmuConfig(split="rn_const", accumulate="group_ef"),
+}
+
+_SPLITTERS = {
+    "bitmask": splitting.split_bitmask,
+    "rn": splitting.split_rn,
+    "rn_const": splitting.split_rn_const,
+}
+
+
+def parse_spec(spec: str) -> OzimmuConfig:
+    """Parse ``"ozimmu_h-8"`` / ``"ozimmu_ef-10:df32"`` style strings."""
+    accum_dtype = "f64"
+    if ":" in spec:
+        spec, accum_dtype = spec.split(":")
+    name, _, kstr = spec.partition("-")
+    if name not in VARIANTS:
+        raise ValueError(f"unknown ozimmu variant {name!r}; "
+                         f"options: {sorted(VARIANTS)}")
+    cfg = VARIANTS[name]
+    return cfg.with_(k=int(kstr) if kstr else cfg.k, accum_dtype=accum_dtype)
+
+
+def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig):
+    """Step (i)+(ii): slice A row-wise and B column-wise."""
+    n = a.shape[1]
+    beta = splitting.compute_beta(n)
+    splitter = _SPLITTERS[cfg.split]
+    sa = splitter(a, cfg.k, beta=beta, axis=0)
+    sb = splitter(b, cfg.k, beta=beta, axis=1)
+    return sa, sb
+
+
+def _matmul_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    sa, sb = split_operands(a, b, cfg)
+    group_gemm_fn = None
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops  # lazy: kernels are optional
+        group_gemm_fn = partial(kops.group_gemm, sa, sb)
+    if cfg.accumulate == "naive":
+        return accumulate.matmul_naive(
+            sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype)
+    return accumulate.matmul_group_ef(
+        sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
+        group_gemm_fn=group_gemm_fn)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ozimmu_matmul(a: jax.Array, b: jax.Array,
+                  cfg: OzimmuConfig = VARIANTS["ozimmu_h"]) -> jax.Array:
+    """Emulated high-precision ``a @ b`` via k-slice INT8 GEMMs.
+
+    a: (m, n), b: (n, p), both f32 or f64.  Returns (m, p) in a.dtype.
+    """
+    return _matmul_impl(a, b, cfg)
+
+
+def _fwd(a, b, cfg):
+    return _matmul_impl(a, b, cfg), (a, b)
+
+
+def _bwd(cfg, res, g):
+    a, b = res
+    # Cotangents through the same emulated GEMM (transposes are free re-slices).
+    da = _matmul_impl(g, b.T, cfg)
+    db = _matmul_impl(a.T, g, cfg)
+    return da, db
+
+
+ozimmu_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,248 @@
+"""Slice extraction ("splitting") for the Ozaki scheme on integer MMUs.
+
+Implements the three splitting strategies from the paper:
+
+  * ``split_bitmask``   — Alg. 3 (Ootomo et al. 2024): truncate consecutive
+    beta-bit groups of the sign-magnitude mantissa.  Digits in [-(2^b-1), 2^b-1].
+  * ``split_rn``        — Alg. 5 (proposed, "RN"): round-to-nearest extraction
+    with a per-slice re-scaled grid (the classic ``(a + sigma) - sigma`` trick).
+    Digits in [-2^(b-1), 2^(b-1)].
+  * ``split_rn_const``  — Alg. 8 (proposed, for "H"): round-to-nearest with a
+    *fixed* base scale and constant grid ratio 2^-beta per slice, so slice
+    scales stay a geometric sequence and group-wise error-free accumulation
+    (Alg. 6/7) applies.
+
+All three return a :class:`Split` with the unified convention
+
+    A  ≈  sum_s  diag(scale[s]) @ digits[s]          (axis=0, row scales)
+    A  ≈  sum_s  digits[s] @ diag(scale[s])          (axis=1, column scales)
+
+and, for the geometric strategies (bitmask / rn_const),
+
+    scale[s] = base * 2^(-beta * s),   s = 1..k,
+
+so that a product slice-pair (s, t) carries the scale
+``baseA (x) baseB * 2^(-beta * (s+t))`` — a function of the group index
+``g = s + t`` only, which is what makes the INT32 group accumulation of
+Alg. 6/7 error free.
+
+Everything is rounding-exact by construction (see tests/test_splitting.py):
+the digit extraction uses only power-of-two scalings, truncation/rounding to
+representable grids, and exact residual subtraction (Dekker).  No ``log2`` is
+evaluated — exponents come from ``frexp`` (the paper warns that log-based
+exponent computation "occasionally returns erroneous results").
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Split",
+    "compute_beta",
+    "compute_r",
+    "split_bitmask",
+    "split_rn",
+    "split_rn_const",
+    "reconstruct",
+]
+
+
+class Split(NamedTuple):
+    """k int8 slices of a matrix plus per-slice scale vectors.
+
+    Attributes:
+      digits: ``(k, m, n)`` int8 slice matrices.
+      scale:  ``(k, r)`` per-slice scale vector (r = rows for ``axis=0``,
+              columns for ``axis=1``); always a power of two.
+      base:   ``(r,)`` geometric base such that ``scale[s] = base * 2^(-beta*(s+1))``
+              (0-indexed s), or ``None`` for the adaptive RN strategy.
+      beta:   bits per slice.
+      axis:   0 if ``scale`` indexes rows of the matrix, 1 for columns.
+    """
+
+    digits: jax.Array
+    scale: jax.Array
+    base: Optional[jax.Array]
+    beta: int
+    axis: int
+
+
+def compute_beta(n: int) -> int:
+    """beta = min(7, floor((31 - log2 n) / 2)) — eq. (4) of the paper.
+
+    Uses the exact integer ceil(log2 n) so the INT32 no-overflow guarantee
+    ``n * (2^beta - 1)^2 < 2^31`` holds for every n, not only powers of two.
+    """
+    if n <= 0:
+        raise ValueError(f"contraction length must be positive, got {n}")
+    clog2 = max(1, (n - 1).bit_length())  # ceil(log2 n), >= 1
+    beta = min(7, (31 - clog2) // 2)
+    if beta < 1:
+        raise ValueError(f"n={n} too large for int8 Ozaki scheme (beta < 1)")
+    return beta
+
+
+def compute_r(n: int, beta: int) -> int:
+    """r = max(1, 2^(31 - 2*beta - ceil(log2 n))) — eq. (12).
+
+    The number of slice-pair products that can be summed in an INT32
+    accumulator without overflow (proof: paper §5.2).
+    """
+    clog2 = max(1, (n - 1).bit_length())
+    return max(1, 2 ** max(0, 31 - 2 * beta - clog2))
+
+
+def _mantissa_bits(dtype) -> int:
+    if dtype == jnp.float64:
+        return 53
+    if dtype == jnp.float32:
+        return 24
+    raise ValueError(f"unsupported input dtype for Ozaki splitting: {dtype}")
+
+
+def _rowmax(a: jax.Array, axis: int) -> jax.Array:
+    """max_j |a_ij| along the non-scale axis; shape (r,)."""
+    return jnp.max(jnp.abs(a), axis=1 - axis)
+
+
+def _pow2_floor(x: jax.Array) -> jax.Array:
+    """2^floor(log2 x) elementwise (x > 0); 1.0 where x == 0."""
+    m, e = jnp.frexp(x)  # x = m * 2^e, m in [0.5, 1)
+    out = jnp.ldexp(jnp.ones_like(x), e - 1)
+    return jnp.where(x == 0, jnp.ones_like(x), out)
+
+
+def _pow2_ceil(x: jax.Array) -> jax.Array:
+    """2^ceil(log2 x) elementwise (x > 0); 1.0 where x == 0."""
+    m, e = jnp.frexp(x)
+    e = jnp.where(m == 0.5, e - 1, e)  # exact powers of two: ceil == floor
+    out = jnp.ldexp(jnp.ones_like(x), e)
+    return jnp.where(x == 0, jnp.ones_like(x), out)
+
+
+def _bcast(v: jax.Array, axis: int) -> jax.Array:
+    """Broadcast a per-row/col vector against the matrix."""
+    return v[:, None] if axis == 0 else v[None, :]
+
+
+def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
+                  axis: int = 0) -> Split:
+    """Alg. 3 — bit-mask splitting, expressed in pure float arithmetic.
+
+    Equivalent to masking consecutive beta-bit groups of the sign-magnitude
+    fixed-point representation of ``a / 2^(floor(log2 rowmax)+1)``:
+    truncation toward zero keeps exactly the leading bits, and the residual
+    update is exact (difference of a float and its truncation).
+    """
+    if beta is None:
+        beta = compute_beta(a.shape[1 - axis])
+    dt = a.dtype
+    two_beta = jnp.asarray(2.0 ** beta, dt)
+
+    base = 2.0 * _pow2_floor(_rowmax(a, axis))          # scale[s] = base * 2^(-beta*s)
+    r = a * _bcast(1.0 / base, axis)                    # exact: base is a power of two
+    digits = []
+    for _ in range(k):
+        r = r * two_beta
+        d = jnp.trunc(r)
+        r = r - d                                       # exact
+        digits.append(d.astype(jnp.int8))               # |d| <= 2^beta - 1 <= 127
+    digits = jnp.stack(digits)
+    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)], dt)
+    scale = base[None, :] * exps[:, None]
+    return Split(digits, scale, base, beta, axis)
+
+
+def _rn_extract(r: jax.Array, grid: jax.Array, axis: int):
+    """One round-to-nearest extraction: returns (slice_value, new_residual).
+
+    The paper's Alg. 5/8 uses the ``(a + sigma) - sigma`` trick (sigma =
+    0.75 * 2^53 * mu) because CUDA lacks a cheap round-to-grid.  XLA/TPU has a
+    native round-to-nearest-even op, so we express the *semantics* directly:
+
+        s = round_nearest_even(r / grid) * grid
+
+    Division/multiplication by the power-of-two grid is exact, so this is
+    bit-identical to the sigma trick — and, unlike the trick, cannot be
+    algebraically simplified away by the compiler (XLA:CPU folds
+    ``(x + c) - c -> x`` for literal c under its default fast-math).
+    The residual subtraction is exact (Dekker/fast-two-sum condition).
+    """
+    g = _bcast(grid, axis)
+    s = jnp.round(r * (1.0 / g)) * g
+    return s, r - s
+
+
+def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
+             axis: int = 0) -> Split:
+    """Alg. 5 — round-to-nearest splitting with per-slice adaptive rescaling.
+
+    Each slice rounds the residual to the nearest multiple of
+    ``2^ceil(log2 rowmax(residual)) * 2^(1-beta)``; digits lie in
+    [-2^(beta-1), 2^(beta-1)].  Scales are *not* geometric across slices
+    (``base is None``), so only naive accumulation (Alg. 4) applies — this is
+    the "ozIMMU_RN" configuration of the paper.
+    """
+    if beta is None:
+        beta = compute_beta(a.shape[1 - axis])
+    dt = a.dtype
+    grid_factor = 2.0 ** (1 - beta)
+
+    r = a
+    digits, scales = [], []
+    for _ in range(k):
+        grid = _pow2_ceil(_rowmax(r, axis)) * grid_factor
+        s, r = _rn_extract(r, grid, axis)
+        d = s * _bcast(1.0 / grid, axis)                # exact integer in [-64, 64]
+        digits.append(d.astype(jnp.int8))
+        scales.append(grid)
+    return Split(jnp.stack(digits), jnp.stack(scales), None, beta, axis)
+
+
+def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
+                   axis: int = 0) -> Split:
+    """Alg. 8 — round-to-nearest splitting with constant grid ratio 2^-beta.
+
+    The base scale ``mu = 2^ceil(log2 rowmax) * 2^(1-beta)`` is computed once
+    (one pass over the matrix instead of k); slice s rounds the residual to
+    grid ``mu * 2^(-beta*(s-1))``.  Slice scales form the geometric sequence
+    required by group-wise error-free accumulation — the "ozIMMU_H" splitting.
+    """
+    if beta is None:
+        beta = compute_beta(a.shape[1 - axis])
+    dt = a.dtype
+    two_beta = jnp.asarray(2.0 ** beta, dt)
+
+    mu = _pow2_ceil(_rowmax(a, axis)) * (2.0 ** (1 - beta))
+    r = a
+    grid = mu
+    digits = []
+    for _ in range(k):
+        s, r = _rn_extract(r, grid, axis)
+        d = s * _bcast(1.0 / grid, axis)
+        digits.append(d.astype(jnp.int8))
+        grid = grid * (1.0 / two_beta)
+    digits = jnp.stack(digits)
+    # scale[s] = mu * 2^(-beta*(s-1)) = (mu * 2^beta) * 2^(-beta*s)
+    base = mu * (2.0 ** beta)
+    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)], dt)
+    scale = base[None, :] * exps[:, None]
+    return Split(digits, scale, base, beta, axis)
+
+
+def reconstruct(split: Split, dtype=None) -> jax.Array:
+    """sum_s diag(scale[s]) @ digits[s] (or the axis=1 transpose form)."""
+    dt = dtype or split.scale.dtype
+    d = split.digits.astype(dt)
+    if split.axis == 0:
+        return jnp.sum(d * split.scale[:, :, None], axis=0)
+    return jnp.sum(d * split.scale[:, None, :], axis=0)
+
+
+def residual(split: Split, a: jax.Array) -> jax.Array:
+    """Truncation error V_k = A - sum_s A_s (== W_k for axis=1)."""
+    return a - reconstruct(split, a.dtype)

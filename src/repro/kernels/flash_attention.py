@@ -1,0 +1,285 @@
+"""Pallas TPU kernel: fused flash-attention forward.
+
+The Cell-A roofline iteration (EXPERIMENTS §Perf) shows ~75 % of the
+train-step HBM traffic is f32 score/probability blocks streamed between
+XLA ops.  This kernel keeps the online-softmax state — the (qc, kc) score
+block, running max/sum and the output accumulator — in VMEM-resident
+tiles; HBM sees only q, k, v and out, removing the O(L^2) traffic term.
+
+Layout: q (BH, Lq, D); k, v (BKV, Lk, D/Dv) with BH = B*H, BKV = B*KV —
+the GQA mapping happens in the k/v BlockSpec index_map (query-head block
+``bh`` reads kv block ``bh // group``), so K/V are NOT expanded in memory.
+
+Grid: (BH, nq, nk) — nk is the innermost (sequential) reduction axis.  The
+running stats (m, l) and accumulator follow the established accumulator
+pattern of ``group_gemm``: extra outputs whose index_map ignores nk, so
+Pallas keeps their tiles resident in VMEM across the kv sweep; the
+normalized output is written on the last nk step.
+
+MXU alignment: qc/kc multiples of 128 recommended on hardware (the ops.py
+wrapper pads); interpret=True validates on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_QC = 256
+DEFAULT_KC = 512
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref,
+                      acc_ref, *, causal: bool, window, qc: int, kc: int,
+                      lk: int, n_k: int, q_offset: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale     # (qc, D)
+    k = k_ref[0].astype(jnp.float32)             # (kc, D)
+    v = v_ref[0]                                 # (kc, Dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (qc, kc)
+
+    q_pos = (qi * qc + q_offset +
+             jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0))
+    k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = k_pos < lk                            # input padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (qc, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                       # (qc, kc)
+    corr = jnp.exp(m_prev - m_new)               # (qc, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        # per-row logsumexp, saved for the recompute-p backward; +inf on
+        # fully-masked (padding) rows so exp(s - lse) == 0 there
+        lse_ref[0] = jnp.where(l_ref[...] > 0, m_ref[...] + jnp.log(l),
+                               jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "causal", "window",
+                                             "qc", "kc", "q_offset",
+                                             "lk", "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        group: int = 1, causal: bool = True, window=None,
+                        qc: int = DEFAULT_QC, kc: int = DEFAULT_KC,
+                        q_offset: int = 0, lk=None,
+                        interpret: bool = True) -> jax.Array:
+    """q (BH, Lq, D); k (BKV, Lk, D); v (BKV, Lk, Dv); BH == BKV * group.
+
+    Lq/Lk must be qc/kc multiples (ops.py pads; ``lk`` is the pre-padding
+    valid key count).  Returns (BH, Lq, Dv) in q.dtype.
+    """
+    BH, Lq, D = q.shape
+    BKV, Lk = k.shape[0], k.shape[1]
+    Dv = v.shape[2]
+    assert BH == BKV * group, (BH, BKV, group)
+    assert Lq % qc == 0 and Lk % kc == 0, (Lq, qc, Lk, kc)
+    n_q, n_k = Lq // qc, Lk // kc
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, window=window, qc=qc, kc=kc,
+        lk=int(lk if lk is not None else Lk), n_k=n_k,
+        q_offset=int(q_offset), scale=float(D) ** -0.5)
+    o, lse, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, qc, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kc, D),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, kc, Dv),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qc, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, qc, 1), lambda bh, qi, ki: (bh, qi, 0)),
+            # VMEM-resident running stats / accumulator (index ignores
+            # bh/ki: scratch-like tiles reset at ki == 0 on every sweep)
+            pl.BlockSpec((qc, 1), lambda bh, qi, ki: (qi, 0)),
+            pl.BlockSpec((qc, 1), lambda bh, qi, ki: (qi, 0)),
+            pl.BlockSpec((qc, Dv), lambda bh, qi, ki: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Lq, Dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, Lq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Lq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Lq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Lq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward kernels: recompute-p flash backward (dq) and (dk, dv)
+# ---------------------------------------------------------------------------
+
+def _recompute_p(q_ref, k_ref, lse_ref, qi, ki, *, qc, kc, lk, causal,
+                 window, q_offset, scale):
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    q_pos = (qi * qc + q_offset +
+             jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0))
+    k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = k_pos < lk
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    return jnp.exp(s - lse_ref[0])              # (qc, kc); lse (1, qc, 1)
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, *, causal, window, qc, kc, lk, n_k,
+                         q_offset, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    p = _recompute_p(q_ref, k_ref, lse_ref, qi, ki, qc=qc, kc=kc, lk=lk,
+                     causal=causal, window=window, q_offset=q_offset,
+                     scale=scale)
+    do = do_ref[0].astype(jnp.float32)          # (qc, Dv)
+    v = v_ref[0].astype(jnp.float32)            # (kc, Dv)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0])                # (qc, kc)
+    k = k_ref[0].astype(jnp.float32)
+    dq_ref[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, *, causal, window, qc, kc, lk,
+                          n_t, group, q_offset, scale):
+    ki = pl.program_id(1)
+    t = pl.program_id(2)        # flattened (q-block, group) reduction axis
+    qi = t // group
+
+    @pl.when(t == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    p = _recompute_p(q_ref, k_ref, lse_ref, qi, ki, qc=qc, kc=kc, lk=lk,
+                     causal=causal, window=window, q_offset=q_offset,
+                     scale=scale)
+    do = do_ref[0].astype(jnp.float32)
+    dv_ref[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (kc, Dv)
+    v = v_ref[0].astype(jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0])
+    q = q_ref[0].astype(jnp.float32)
+    dk_ref[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (kc, D)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "causal", "window",
+                                             "qc", "kc", "q_offset", "lk",
+                                             "interpret"))
+def flash_attention_bwd(q, k, v, out, lse, dout, *, group: int = 1,
+                        causal: bool = True, window=None,
+                        qc: int = DEFAULT_QC, kc: int = DEFAULT_KC,
+                        q_offset: int = 0, lk=None, interpret: bool = True):
+    """Recompute-p flash backward.  Inputs as in the forward plus the saved
+    ``out`` and row ``lse`` (BH, Lq, 1); returns (dq, dk, dv) with dk/dv in
+    the UNEXPANDED (BKV, ...) layout (the G q-head contributions are summed
+    inside the dkv kernel's resident accumulator)."""
+    BH, Lq, D = q.shape
+    BKV, Lk = k.shape[0], k.shape[1]
+    Dv = v.shape[2]
+    n_q, n_k = Lq // qc, Lk // kc
+    lk_i = int(lk if lk is not None else Lk)
+    scale = float(D) ** -0.5
+    # delta = rowsum(dout * out): tiny; computed in XLA
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1, keepdims=True)     # (BH, Lq, 1)
+
+    dq, = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, causal=causal, window=window,
+                          qc=qc, kc=kc, lk=lk_i, n_k=n_k,
+                          q_offset=int(q_offset), scale=scale),
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, qc, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kc, D), lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, kc, Dv), lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, qc, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, qc, 1), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, qc, 1), lambda bh, qi, ki: (bh, qi, 0)),
+        ],
+        out_specs=[pl.BlockSpec((qc, D), lambda bh, qi, ki: (qi, 0))]
+        if False else [pl.BlockSpec((1, qc, D),
+                                    lambda bh, qi, ki: (bh, qi, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BH, Lq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    n_t = n_q * group
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, causal=causal,
+                          window=window, qc=qc, kc=kc, lk=lk_i, n_t=n_t,
+                          group=group, q_offset=int(q_offset), scale=scale),
+        grid=(BKV, n_k, n_t),
+        in_specs=[
+            pl.BlockSpec((1, qc, D),
+                         lambda bkv, ki, t: (bkv * group + t % group,
+                                             t // group, 0)),
+            pl.BlockSpec((1, kc, D), lambda bkv, ki, t: (bkv, ki, 0)),
+            pl.BlockSpec((1, kc, Dv), lambda bkv, ki, t: (bkv, ki, 0)),
+            pl.BlockSpec((1, qc, Dv),
+                         lambda bkv, ki, t: (bkv * group + t % group,
+                                             t // group, 0)),
+            pl.BlockSpec((1, qc, 1),
+                         lambda bkv, ki, t: (bkv * group + t % group,
+                                             t // group, 0)),
+            pl.BlockSpec((1, qc, 1),
+                         lambda bkv, ki, t: (bkv * group + t % group,
+                                             t // group, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kc, D), lambda bkv, ki, t: (bkv, ki, 0)),
+            pl.BlockSpec((1, kc, Dv), lambda bkv, ki, t: (bkv, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, Lk, D), jnp.float32),
+            jax.ShapeDtypeStruct((BKV, Lk, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))

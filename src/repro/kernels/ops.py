@@ -1,0 +1,147 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: padding to tile multiples, row-scale preparation, slice-pair
+stacking for group GEMMs, and the interpret-mode switch (CPU validation —
+this container has no TPU; `interpret=True` runs the kernel bodies in
+Python/XLA-CPU and is the correctness reference path used by tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splitting import Split, _pow2_ceil, _pow2_floor, _rowmax
+from repro.kernels import group_gemm as _gg
+from repro.kernels import scale_accum as _sa
+from repro.kernels import split_fused as _sf
+
+# Flip to False when running on real TPUs.
+INTERPRET = True
+
+
+def _pad_to(x: jax.Array, mults: Sequence[int]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _tile_for(dim: int, pref: int, mult: int) -> int:
+    """Largest tile <= pref that is a multiple of ``mult`` covering dim."""
+    if dim <= mult:
+        return mult
+    return min(pref, (dim + mult - 1) // mult * mult if dim < pref else pref)
+
+
+def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
+                axis: int = 0) -> Split:
+    """Pallas-accelerated splitting (Alg. 3 'bitmask' / Alg. 8 'rn_const').
+
+    Returns the same :class:`Split` contract as the pure-jnp splitters.
+    axis=1 (column scales, for B) is handled by transposing the *scale*
+    handling only — digits stay in the original orientation via a transposed
+    kernel launch.
+    """
+    a32 = a.astype(jnp.float32)
+    if axis == 1:
+        sp = split_fused(a32.T, k, beta, mode=mode, axis=0)
+        return Split(jnp.swapaxes(sp.digits, 1, 2), sp.scale, sp.base,
+                     beta, 1)
+    rowmax = _rowmax(a32, 0)
+    if mode == "bitmask":
+        base = 2.0 * _pow2_floor(rowmax)
+        invgrid = (2.0 ** beta) / base  # 1/grid_1, grid_1 = base*2^-beta
+    else:
+        mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
+        base = mu * (2.0 ** beta)
+        invgrid = 1.0 / mu
+    m, n = a32.shape
+    bm = _tile_for(m, _sf.DEFAULT_BM, 8)
+    bn = _tile_for(n, _sf.DEFAULT_BN, 128)
+    a_p = _pad_to(a32, (bm, bn))
+    inv_p = _pad_to(invgrid[:, None], (bm, 1))
+    digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=mode, bm=bm,
+                             bn=bn, interpret=INTERPRET)[:, :m, :n]
+    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)],
+                       jnp.float32)
+    scale = base[None, :] * exps[:, None]
+    return Split(digits, scale, base, beta, 0)
+
+
+def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
+               ) -> jax.Array:
+    """sum over slice pairs of A_s @ B_t in int32 via the Pallas kernel.
+
+    Signature matches the ``group_gemm_fn`` hook in
+    :func:`repro.core.accumulate.matmul_group_ef` (after partial application
+    of sa, sb).
+    """
+    idx_a = [s - 1 for s, _ in pairs]
+    idx_b = [t - 1 for _, t in pairs]
+    a8 = sa.digits[jnp.asarray(idx_a)]
+    b8 = sb.digits[jnp.asarray(idx_b)]
+    G, m, n = a8.shape
+    p = b8.shape[2]
+    bm = _tile_for(m, _gg.DEFAULT_BM, 128)
+    bp = _tile_for(p, _gg.DEFAULT_BP, 128)
+    bn = _tile_for(n, _gg.DEFAULT_BN, 128)
+    a8 = _pad_to(a8, (1, bm, bn))
+    b8 = _pad_to(b8, (1, bn, bp))
+    out = _gg.group_gemm(a8, b8, bm=bm, bp=bp, bn=bn, interpret=INTERPRET)
+    return out[:m, :p]
+
+
+def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,
+                c_hi: jax.Array, c_lo: jax.Array):
+    """Fused df32 epilogue; shapes (m,p), (m,), (p,), (m,p), (m,p)."""
+    m, p = p32.shape
+    bm = _tile_for(m, _sa.DEFAULT_BM, 8)
+    bp = _tile_for(p, _sa.DEFAULT_BP, 128)
+    pads = ((-m) % bm, (-p) % bp)
+    p32_p = _pad_to(p32, (bm, bp))
+    hi_p = _pad_to(c_hi, (bm, bp))
+    lo_p = _pad_to(c_lo, (bm, bp))
+    srow_p = _pad_to(srow[:, None], (bm, 1))
+    scol_p = _pad_to(scol[None, :], (1, bp))
+    hi, lo = _sa.scale_accum(p32_p, srow_p, scol_p, hi_p, lo_p, bm=bm, bp=bp,
+                             interpret=INTERPRET)
+    if pads == (0, 0):
+        return hi, lo
+    return hi[:m, :p], lo[:m, :p]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    qc: int = 256, kc: int = 512, q_offset: int = 0):
+    """jit'd wrapper for the fused flash-attention forward kernel.
+
+    q (B, Lq, H, D); k, v (B, Lk, KV, D/Dv).  Pads L to tile multiples,
+    flattens (B, H) into the kernel's grid-major axis, maps GQA groups in
+    the BlockSpec (no K/V expansion), and slices the padding back off.
+    """
+    from repro.kernels import flash_attention as _fa
+    B, Lq, H, D = q.shape
+    _, Lk, KV, Dv = v.shape
+    group = H // KV
+    qc = min(qc, max(8, Lq))
+    kc = min(kc, max(8, Lk))
+    Lq_p = -(-Lq // qc) * qc
+    Lk_p = -(-Lk // kc) * kc
+    qt = jnp.pad(q, ((0, 0), (0, Lq_p - Lq), (0, 0), (0, 0)))
+    kt = jnp.pad(k, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+    vt = jnp.pad(v, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+    qt = qt.transpose(0, 2, 1, 3).reshape(B * H, Lq_p, D)
+    kt = kt.transpose(0, 2, 1, 3).reshape(B * KV, Lk_p, D)
+    vt = vt.transpose(0, 2, 1, 3).reshape(B * KV, Lk_p, Dv)
+    o, _ = _fa.flash_attention_fwd(qt, kt, vt, group=group, causal=causal,
+                                   window=window, qc=qc, kc=kc,
+                                   q_offset=q_offset, lk=Lk,
+                                   interpret=INTERPRET)
+    o = o.reshape(B, H, Lq_p, Dv).transpose(0, 2, 1, 3)
+    return o[:, :Lq]

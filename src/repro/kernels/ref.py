@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_fused_ref(a: jax.Array, invgrid: jax.Array, *, k: int, beta: int,
+                    mode: str = "rn_const") -> jax.Array:
+    """Oracle for kernels.split_fused: (k, m, n) int8 digits."""
+    two_beta = jnp.asarray(2.0 ** beta, a.dtype)
+    r = a * invgrid
+    outs = []
+    if mode == "bitmask":
+        for _ in range(k):
+            d = jnp.trunc(r)
+            outs.append(d.astype(jnp.int8))
+            r = (r - d) * two_beta
+    else:
+        for _ in range(k):
+            d = jnp.round(r)
+            outs.append(d.astype(jnp.int8))
+            r = (r - d) * two_beta
+    return jnp.stack(outs)
+
+
+def group_gemm_ref(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """Oracle for kernels.group_gemm: sum_g a8[g] @ b8[g] in int32."""
+    prods = jax.lax.dot_general(
+        a8, b8, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+    return jnp.sum(prods, axis=0, dtype=jnp.int32)
+
+
+def scale_accum_ref(p32, srow, scol, c_hi, c_lo):
+    """Oracle for kernels.scale_accum (df32 compensated accumulate)."""
+    p = p32
+    p_hi = (p >> 8) << 8
+    p_lo = p - p_hi
+    x_hi = p_hi.astype(jnp.float32) * srow * scol
+    x_lo = p_lo.astype(jnp.float32) * srow * scol
+    s = c_hi + x_hi
+    bb = s - c_hi
+    err = (c_hi - (s - bb)) + (x_hi - bb)
+    lo = c_lo + err + x_lo
+    hi2 = s + lo
+    lo2 = lo - (hi2 - s)
+    return hi2, lo2
+
+
+def flash_attention_ref(q, k, v, *, group=1, causal=True, window=None,
+                        lk=None, q_offset=0):
+    """Oracle for kernels.flash_attention: naive full-softmax attention in
+    the kernel's (BH, L, D) layout with GQA group mapping."""
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    lk = Lk if lk is None else lk
+    kg = jnp.repeat(k, group, axis=0)
+    vg = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bsd->bqs", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * D ** -0.5
+    q_pos = jnp.arange(Lq)[:, None] + q_offset
+    k_pos = jnp.arange(Lk)[None, :]
+    mask = k_pos < lk
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqs,bsd->bqd", p.astype(vg.dtype), vg)
+    return o.astype(q.dtype)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused epilogue for step (iv) — convert + scale + add.
+
+Naive accumulation materializes, per term: an INT32->float convert, two
+diagonal scalings, and an add — four HBM-bound element passes (this is the
+"accumulation in FP64" bar that costs 40-50 % of ozIMMU's runtime, Figs 2-3).
+This kernel fuses all of them into ONE pass:
+
+    C_hi, C_lo += two_sum(scale_row * float(P32) * scale_col * 2^e)
+
+with a double-float (hi, lo) accumulator carried in HBM and updated in VMEM
+(input_output_aliasing -> in-place).  One read of P32 + read/write of C per
+term instead of four.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BP = 512
+
+
+def _scale_accum_kernel(p32_ref, srow_ref, scol_ref, hi_in_ref, lo_in_ref,
+                        hi_ref, lo_ref):
+    """(bm, bp) tile: df32 accumulate the scaled int32 product."""
+    p = p32_ref[...]
+    # exact int32 -> (hi, lo) f32 split via low-8-bit clear
+    p_hi = (p >> 8) << 8
+    p_lo = p - p_hi
+    srow = srow_ref[...]  # (bm, 1), power of two * 2^e folded in
+    scol = scol_ref[...]  # (1, bp), power of two
+    x_hi = p_hi.astype(jnp.float32) * srow * scol
+    x_lo = p_lo.astype(jnp.float32) * srow * scol
+    # TwoSum(c_hi, x_hi) then fold errors into lo
+    a = hi_in_ref[...]
+    s = a + x_hi
+    bb = s - a
+    err = (a - (s - bb)) + (x_hi - bb)
+    lo = lo_in_ref[...] + err + x_lo
+    # renormalize (fast two-sum)
+    hi2 = s + lo
+    lo2 = lo - (hi2 - s)
+    hi_ref[...] = hi2
+    lo_ref[...] = lo2
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
+def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,
+                c_hi: jax.Array, c_lo: jax.Array, *, bm: int = DEFAULT_BM,
+                bp: int = DEFAULT_BP, interpret: bool = False):
+    """(c_hi, c_lo) += srow * float(p32) * scol, compensated.  Returns new
+    (c_hi, c_lo); buffers are donated (aliased) so the update is in-place."""
+    m, p = p32.shape
+    assert m % bm == 0 and p % bp == 0, (p32.shape, bm, bp)
+    assert srow.shape == (m, 1) and scol.shape == (1, p)
+    grid = (m // bm, p // bp)
+    return pl.pallas_call(
+        _scale_accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bp), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, p), jnp.float32),
+                   jax.ShapeDtypeStruct((m, p), jnp.float32)],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(p32, srow, scol, c_hi, c_lo)

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initializes, while tests/benches run on the single real CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None):
+    """Small mesh over however many (host) devices tests forced."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_rules(mesh, arch: Optional[str] = None):
+    """Pick the logical->mesh rule table for a mesh (+ per-arch overrides)."""
+    from repro.distributed.sharding import MULTI_POD_RULES, SINGLE_POD_RULES
+    rules = dict(MULTI_POD_RULES if "pod" in mesh.axis_names
+                 else SINGLE_POD_RULES)
+    if arch is not None:
+        from repro import configs
+        rules.update(configs.rules_overrides(arch))
+    return rules

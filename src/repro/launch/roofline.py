@@ -1,0 +1,173 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes        / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the optimized HLO text: the summed operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+
+Hardware model (TPU-v5e-like, per chip): 197 TFLOP/s bf16, 394 TOP/s int8,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape token: bf16[128,512]{1,0}  /  f32[]  /  (tuple, ...) handled per-element
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind + "-done(" in line:
+            continue  # -done carries no new payload (counted at -start)
+        # operand shapes = every shape token after the '(' of the call
+        call = line[m.end() - 1:]
+        shapes = _SHAPE_RE.findall(call)
+        if not shapes:
+            # fall back to result shape(s) before '='
+            shapes = _SHAPE_RE.findall(line[:m.start()])
+        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    peak_flops: float = PEAK_BF16
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """No-overlap step-time lower bound."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def compute_fraction(self) -> float:
+        """How compute-bound the cell is (1.0 = at the compute roofline)."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU: model flops over peak during t_bound."""
+        denom = self.chips * self.peak_flops * self.t_bound
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 t_bound=self.t_bound, compute_fraction=self.compute_fraction,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 mfu_bound=self.mfu_bound)
+        return d
+
+
+def cost_flops_bytes(cost: Optional[dict]):
+    """Extract (flops, bytes) from compiled.cost_analysis()."""
+    if not cost:
+        return 0.0, 0.0
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in cost.items()
+                   if k.startswith("bytes accessed"))
+    return flops, byts
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+    return sum(int(s.size if hasattr(s, "size") else 0)
+               for s in jax.tree.leaves(shapes_tree))
+
+
+def model_flops_for(cfg, shape, n_params: int, n_active: Optional[int] = None):
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), N = active params."""
+    n = n_active if n_active is not None else n_params
+    B, L = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * B * L
+    if shape.kind == "prefill":
+        return 2.0 * n * B * L
+    return 2.0 * n * B  # decode: one token per row
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Active parameters per token (MoE: shared + topk routed)."""
+    if cfg.n_experts:
+        # routed expert params
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert * cfg.n_layers
+        routed_total = per_expert * cfg.n_experts
+        routed_active = per_expert * cfg.topk
+        return n_params - routed_total + routed_active
+    return n_params

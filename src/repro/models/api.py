@@ -1,0 +1,94 @@
+"""Uniform model API across the six families.
+
+Every family exposes, through :func:`get_model`:
+
+    init(rng, cfg)                      -> (params, logical_axes)
+    forward(params, cfg, batch)         -> logits (B, L, vocab) f32
+    init_cache(cfg, batch_size, max_len, params=None, ctx=None) -> cache
+    cache_axes(cfg)                     -> logical axes mirroring the cache
+    decode_step(params, cfg, cache, tokens, cur_len) -> (logits, cache)
+
+``batch`` is a dict: ``tokens`` (B, L) int32 always; ``image_embeds``
+(B, vision_seq, d) for the vlm family; ``frames`` (B, F, d) for encdec.
+The shared next-token loss lives here too.
+"""
+from __future__ import annotations
+
+import types
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, moe, ssm, transformer, vlm
+from repro.models.common import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "mla_moe": moe,
+    "vlm": vlm,
+    "encdec": encdec,
+    "ssm": ssm,
+    "hybrid": hybrid,
+}
+
+
+class Model(types.SimpleNamespace):
+    pass
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+
+    def forward(params, cfg, batch: Dict[str, Any]):
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            return mod.forward(params, cfg, tokens, batch["image_embeds"])
+        if cfg.family == "encdec":
+            return mod.forward(params, cfg, tokens, batch["frames"])
+        return mod.forward(params, cfg, tokens)
+
+    def init_cache(cfg, batch_size, max_len, params=None, ctx=None):
+        if cfg.family == "vlm":
+            return mod.init_cache(cfg, batch_size, max_len,
+                                  image_embeds=ctx, params=params)
+        if cfg.family == "encdec":
+            return mod.init_cache(cfg, batch_size, max_len,
+                                  memory=ctx, params=params)
+        return mod.init_cache(cfg, batch_size, max_len)
+
+    cache_axes = getattr(mod, "cache_axes", None)
+    if cache_axes is None and cfg.family in ("moe", "mla_moe"):
+        def cache_axes(cfg):
+            if cfg.family == "mla_moe":
+                return {"latent": ("layers", "cache_batch", None, "kv_lora"),
+                        "k_rope": ("layers", "cache_batch", None, "cache_hd")}
+            return transformer.cache_axes(cfg)
+
+    return Model(init=mod.init, forward=forward, init_cache=init_cache,
+                 cache_axes=cache_axes, decode_step=mod.decode_step,
+                 module=mod)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy of logits[:, :-1] predicting tokens[:, 1:].
+
+    The gold logit is extracted with a masked sum over the vocab axis (NOT
+    ``take_along_axis``): under vocab-sharded logits a gather would make
+    GSPMD all-gather the full (B, L, V) logits per device, while the masked
+    sum stays sharded and reduces with one small all-reduce.
+    """
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,125 @@
+"""Shared model machinery: config dataclass, param builder, init helpers.
+
+Models are functional: ``init(rng, cfg) -> (params, axes)`` where ``axes``
+mirrors ``params`` with logical-axis tuples, and ``forward(params, cfg, ...)``
+is a pure function.  No flax — params are nested dicts of jax arrays, which
+keeps eval_shape/pjit/scan interop trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import MatmulEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"   # dense | moe | mla_moe | vlm | encdec | ssm | hybrid
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab: int = 1024
+    head_dim: Optional[int] = None
+    rope_theta: float = 1e4
+    mlp_type: str = "swiglu"          # swiglu | gelu
+    window: Optional[int] = None            # sliding-window (local) attention
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    topk: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "scatter"   # scatter (GSPMD) | a2a (shard_map)
+    # MLA (deepseek-v2)
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0
+    # SSM (mamba2)
+    d_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    ssm_headdim: int = 64
+    chunk: int = 256
+    # hybrid (recurrentgemma)
+    pattern: Tuple[str, ...] = ()           # e.g. ("R", "R", "A")
+    n_pattern_blocks: int = 0
+    n_tail_layers: int = 0
+    lru_width: int = 0
+    # VLM (llama-3.2-vision)
+    cross_every: int = 0                    # 1 cross-attn layer per N self
+    vision_seq: int = 0
+    # enc-dec (seamless)
+    enc_layers: int = 0
+    frames: int = 0
+    # numerics / memory
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    remat_block: int = 1                    # layers per remat unit
+    engine_spec: str = "bf16"               # MatmulEngine spec
+    # attention chunking (flash-style)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # replicate KV heads to all Q heads before training attention: shards
+    # the score computation over H (q-heads) instead of KV — wins whenever
+    # KV < model-axis < H (uneven-KV GQA); costs 2x K/V activation bytes.
+    expand_kv: bool = False
+    # skip long-context cells (pure full-attention archs)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/LM-head
+        shard evenly on the 16-way model axis (jit arg shardings require
+        exact divisibility).  Standard practice; pad columns train to low
+        logits and are never targets."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def engine(self) -> MatmulEngine:
+        return MatmulEngine(self.engine_spec)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# param construction
+# ---------------------------------------------------------------------------
+
+def dense_param(rng, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(rng, shape, dtype) * scale
+
+
+def init_stacked(rng, n: int, layer_init):
+    """vmap a single-layer init over n layer seeds -> stacked params."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(layer_init)(rngs)
+
+
+def stack_axes(axes_tree):
+    """Prepend the 'layers' axis to every logical-axes tuple in a tree."""
+    return jax.tree.map(
+        lambda t: ("layers",) + t, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x))
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (OptConfig, OptState, init, step, lr_at,
+                               global_norm, zero_axes)
+from repro.optim import compress

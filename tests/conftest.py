@@ -1,0 +1,21 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own 512-device
+# flag in a subprocess).  x64 must be enabled before jax initializes: the core
+# library emulates FP64 GEMMs.
+os.environ.setdefault("JAX_ENABLE_X64", "true")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)
+
+
+def make_phi_matrix(rng, m, n, phi=0.5, dtype=np.float64):
+    """Paper's test matrices: a_ij = (U_ij - 0.5) * exp(phi * N_ij)."""
+    u = rng.uniform(0.0, 1.0, (m, n))
+    z = rng.standard_normal((m, n))
+    return ((u - 0.5) * np.exp(phi * z)).astype(dtype)

@@ -1,0 +1,170 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles, with
+shape/dtype sweeps, plus end-to-end equivalence against the core library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (OzimmuConfig, VARIANTS, ozimmu_matmul, compute_beta,
+                        split_bitmask, split_rn_const)
+from repro.core.ozimmu import split_operands
+from repro.kernels import ops, ref
+from repro.kernels.split_fused import split_fused as raw_split
+from repro.kernels.group_gemm import group_gemm as raw_group_gemm
+from repro.kernels.scale_accum import scale_accum as raw_scale_accum
+from tests.conftest import make_phi_matrix
+
+
+# ---------------------------------------------------------------------------
+# split_fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["bitmask", "rn_const"])
+@pytest.mark.parametrize("m,n", [(8, 128), (16, 256), (256, 512), (264, 640)])
+def test_split_fused_matches_ref(rng, mode, m, n):
+    k, beta = 5, 7
+    a = jnp.asarray(make_phi_matrix(rng, m, n, phi=1.0, dtype=np.float32))
+    rowmax = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+    from repro.core.splitting import _pow2_ceil, _pow2_floor
+    if mode == "bitmask":
+        inv = (2.0 ** beta) / (2.0 * _pow2_floor(rowmax))
+    else:
+        inv = 1.0 / (_pow2_ceil(rowmax) * 2.0 ** (1 - beta))
+    bm = 8 if m <= 8 else 16
+    bn = 128
+    a_p = ops._pad_to(a, (bm, bn))
+    inv_p = ops._pad_to(inv, (bm, 1))
+    got = raw_split(a_p, inv_p, k=k, beta=beta, mode=mode, bm=bm, bn=bn,
+                    interpret=True)
+    want = ref.split_fused_ref(a_p, inv_p, k=k, beta=beta, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode,lib", [("bitmask", split_bitmask),
+                                      ("rn_const", split_rn_const)])
+def test_split_fused_matches_library(rng, mode, lib):
+    """The kernel path must produce the SAME digits as the core splitters
+    (both axes), since they implement the same algorithm."""
+    a = jnp.asarray(make_phi_matrix(rng, 48, 160, dtype=np.float32))
+    k = 4
+    beta = compute_beta(160)
+    for axis in (0, 1):
+        sp_k = ops.split_fused(a, k, beta, mode=mode, axis=axis)
+        sp_l = lib(a, k, beta=beta, axis=axis)
+        np.testing.assert_array_equal(np.asarray(sp_k.digits),
+                                      np.asarray(sp_l.digits))
+        np.testing.assert_allclose(np.asarray(sp_k.scale),
+                                   np.asarray(sp_l.scale), rtol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 40), n=st.integers(1, 300), k=st.integers(1, 6),
+       seed=st.integers(0, 2**31), mode=st.sampled_from(["bitmask", "rn_const"]))
+def test_split_fused_property_padding(m, n, k, seed, mode):
+    """Arbitrary (unaligned) shapes: ops.split_fused == library splitter."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(make_phi_matrix(rng, m, n, dtype=np.float32))
+    beta = 7
+    lib = split_bitmask if mode == "bitmask" else split_rn_const
+    sp_k = ops.split_fused(a, k, beta, mode=mode)
+    sp_l = lib(a, k, beta=beta)
+    np.testing.assert_array_equal(np.asarray(sp_k.digits),
+                                  np.asarray(sp_l.digits))
+
+
+# ---------------------------------------------------------------------------
+# group_gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G,m,n,p", [(1, 128, 128, 128), (3, 128, 256, 128),
+                                     (7, 256, 128, 384)])
+def test_group_gemm_matches_ref(rng, G, m, n, p):
+    a8 = jnp.asarray(rng.integers(-127, 128, (G, m, n)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (G, n, p)), jnp.int8)
+    got = raw_group_gemm(a8, b8, bm=128, bp=128, bn=128, interpret=True)
+    want = ref.group_gemm_ref(a8, b8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(G=st.integers(1, 5), m=st.integers(1, 150), n=st.integers(1, 200),
+       p=st.integers(1, 150), seed=st.integers(0, 2**31))
+def test_group_gemm_property_unaligned(G, m, n, p, seed):
+    """ops.group_gemm pads arbitrary shapes and matches the int64 oracle."""
+    rng = np.random.default_rng(seed)
+    from repro.core.splitting import Split
+    a8 = jnp.asarray(rng.integers(-64, 65, (3, m, n)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-64, 65, (3, n, p)), jnp.int8)
+    sa = Split(a8, None, None, 7, 0)
+    sb = Split(b8, None, None, 7, 1)
+    pairs = [(s + 1, 3 - s) for s in range(min(G, 2) + 1)][:G] or [(1, 1)]
+    pairs = [(s, t) for s, t in pairs if s <= 3 and t <= 3]
+    got = np.asarray(ops.group_gemm(sa, sb, pairs), np.int64)
+    want = np.zeros((m, p), np.int64)
+    for s, t in pairs:
+        want += np.asarray(a8[s - 1], np.int64) @ np.asarray(b8[t - 1], np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_group_gemm_no_int32_overflow_at_r_limit(rng):
+    """Adversarial: G = r pairs of max-magnitude digits must NOT overflow."""
+    n = 128
+    beta = compute_beta(n)  # 7
+    from repro.core import compute_r
+    r = compute_r(n, beta)
+    G = min(r, 8)
+    a8 = jnp.full((G, 8, n), 127, jnp.int8)
+    b8 = jnp.full((G, n, 8), 127, jnp.int8)
+    got = np.asarray(raw_group_gemm(
+        ops._pad_to(a8, (1, 128, 128)), ops._pad_to(b8, (1, 128, 128)),
+        bm=128, bp=128, bn=128, interpret=True), np.int64)[:8, :8]
+    want = G * n * 127 * 127
+    assert want < 2**31
+    np.testing.assert_array_equal(got, np.full((8, 8), want))
+
+
+# ---------------------------------------------------------------------------
+# scale_accum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,p", [(8, 128), (256, 512), (100, 300)])
+def test_scale_accum_matches_ref(rng, m, p):
+    p32 = jnp.asarray(rng.integers(-2**30, 2**30, (m, p)), jnp.int32)
+    srow = jnp.asarray(2.0 ** rng.integers(-20, 20, (m,)), jnp.float32)
+    scol = jnp.asarray(2.0 ** rng.integers(-20, 20, (p,)), jnp.float32)
+    c_hi = jnp.asarray(rng.standard_normal((m, p)), jnp.float32)
+    c_lo = jnp.asarray(rng.standard_normal((m, p)) * 1e-7, jnp.float32)
+    hi, lo = ops.scale_accum(p32, srow, scol, c_hi, c_lo)
+    whi, wlo = ref.scale_accum_ref(p32, srow[:, None], scol[None, :], c_hi, c_lo)
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(whi))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(wlo))
+
+
+def test_scale_accum_compensation_beats_naive(rng):
+    """df32 accumulation keeps bits a plain f32 accumulator loses."""
+    m = p = 8
+    c_hi = jnp.full((m, p), 1e8, jnp.float32)
+    c_lo = jnp.zeros((m, p), jnp.float32)
+    p32 = jnp.full((m, p), 3, jnp.int32)
+    one_r = jnp.ones((m,), jnp.float32)
+    one_c = jnp.ones((p,), jnp.float32)
+    hi, lo = ops.scale_accum(p32, one_r, one_c, c_hi, c_lo)
+    total = np.asarray(hi, np.float64) + np.asarray(lo, np.float64)
+    np.testing.assert_array_equal(total, np.full((m, p), 1e8 + 3.0))
+    naive = np.asarray(c_hi) + np.float32(3.0)
+    assert not np.array_equal(naive, np.full((m, p), 1e8 + 3.0))  # f32 lost it
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: full ozimmu through the Pallas path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["ozimmu_ef", "ozimmu_h"])
+def test_pallas_path_matches_jnp_path(rng, variant):
+    a = jnp.asarray(make_phi_matrix(rng, 96, 160, dtype=np.float32))
+    b = jnp.asarray(make_phi_matrix(rng, 160, 64, dtype=np.float32))
+    cfg = VARIANTS[variant].with_(k=5, accum_dtype="f32")
+    c_jnp = np.asarray(ozimmu_matmul(a, b, cfg))
+    c_pl = np.asarray(ozimmu_matmul(a, b, cfg.with_(use_pallas=True)))
+    np.testing.assert_array_equal(c_pl, c_jnp)

@@ -1,0 +1,132 @@
+"""Per-arch smoke tests on reduced configs (assignment requirement).
+
+For every assigned architecture: instantiate the reduced same-family config,
+run one forward and one train-grad step on CPU, assert output shapes and
+no NaNs.  For decoder families additionally check decode-vs-forward parity:
+teacher-forcing the same tokens through ``decode_step`` must reproduce the
+full-sequence ``forward`` logits (the KV/state caches are exercised end to
+end).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+
+
+def make_batch(cfg, rng, batch=2, seq=16):
+    tokens = jax.random.randint(rng, (batch, seq), 0, cfg.vocab,
+                                dtype=jnp.int32)
+    b = {"tokens": tokens}
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            rng, (batch, cfg.vision_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(
+            rng, (batch, seq, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params, axes = model.init(rng, cfg)
+    # axes tree mirrors params
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a)
+
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits = jax.jit(lambda p, b: model.forward(p, cfg, b))(params, batch)
+    B, L = batch["tokens"].shape
+    assert logits.shape == (B, L, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+
+    def loss_fn(p):
+        return api.next_token_loss(model.forward(p, cfg, batch),
+                                   batch["tokens"])
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+DECODE_TOL = {"dense": 2e-2, "moe": 5e-2, "mla_moe": 5e-2, "vlm": 2e-2,
+              "encdec": 2e-2, "ssm": 5e-2, "hybrid": 5e-2}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode_step must reproduce forward() logits."""
+    cfg = get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params, _ = model.init(rng, cfg)
+    B, L = 2, 8
+    batch = make_batch(cfg, jax.random.PRNGKey(1), batch=B, seq=L)
+    ref = model.forward(params, cfg, batch)  # (B, L, vocab)
+
+    ctx = batch.get("image_embeds")
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        ctx = encdec.encode(params, cfg, batch["frames"])
+    cache = model.init_cache(cfg, B, L, params=params, ctx=ctx)
+
+    step = jax.jit(lambda c, t, n: model.decode_step(params, cfg, c, t, n))
+    outs = []
+    for t in range(L):
+        logits, cache = step(cache, batch["tokens"][:, t:t + 1],
+                             jnp.asarray(t + 1, jnp.int32))
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1)
+    err = jnp.max(jnp.abs(got - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9)
+    assert float(err) < DECODE_TOL[cfg.family], f"{arch}: decode mismatch {err}"
+
+
+def test_mamba_ssd_chunked_vs_step():
+    """SSD chunked scan must equal the step-by-step recurrence."""
+    from repro.models.ssm import ssd_chunked, ssd_step
+    rng = np.random.default_rng(0)
+    Bb, Lq, H, P, N = 2, 12, 3, 4, 5
+    x = jnp.asarray(rng.standard_normal((Bb, Lq, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (Bb, Lq, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((Bb, Lq, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((Bb, Lq, N)), jnp.float32)
+    y_chunk, h_chunk = ssd_chunked(x, dt, A, B, C, chunk=5)  # uneven chunks
+    h = jnp.zeros((Bb, H, P, N), jnp.float32)
+    ys = []
+    for t in range(Lq):
+        y, h = ssd_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], h)
+        ys.append(y)
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rg_lru_scan_vs_step():
+    from repro.models.hybrid import init_recurrent_layer, rg_lru, rg_lru_step
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma_9b", smoke=True)
+    p, _ = init_recurrent_layer(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 9, cfg.lru_width)), jnp.float32)
+    y_scan, h_last = rg_lru(p, x)
+    h = jnp.zeros((2, cfg.lru_width))
+    ys = []
+    for t in range(9):
+        y, h = rg_lru_step(p, x[:, t], h)
+        ys.append(y)
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)

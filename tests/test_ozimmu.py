@@ -1,0 +1,173 @@
+"""Integration tests for the full ozimmu GEMM emulation (all 4 variants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.exact import dd_matmul, max_relative_error
+from repro.core import (VARIANTS, OzimmuConfig, ozimmu_matmul, compute_beta,
+                        compute_r, num_highprec_adds, make_engine)
+from repro.core.accumulate import matmul_naive, matmul_group_ef, int8_gemm
+from repro.core.ozimmu import split_operands
+from repro.core import analysis
+from tests.conftest import make_phi_matrix
+
+
+@pytest.mark.parametrize("variant", list(VARIANTS))
+def test_beats_fp64_at_high_k(rng, variant):
+    """Paper Fig. 5: with enough slices every variant out-accuracies DGEMM."""
+    n = 128
+    a = make_phi_matrix(rng, n, n, phi=0.5)
+    b = make_phi_matrix(rng, n, n, phi=0.5)
+    hi, lo = dd_matmul(a, b)
+    cfg = VARIANTS[variant].with_(k=11)
+    c = np.asarray(ozimmu_matmul(jnp.asarray(a), jnp.asarray(b), cfg))
+    err = max_relative_error(c, hi, lo)
+    err64 = max_relative_error(np.asarray(jnp.asarray(a) @ jnp.asarray(b)), hi, lo)
+    assert err < err64, (err, err64)
+    assert err < 1e-13
+
+
+def test_group_ef_is_error_free_vs_naive(rng):
+    """Alg. 6's claim: grouping changes NOTHING numerically (bit-identical)
+    while r >= group size — the int32 sums are exact."""
+    a = jnp.asarray(make_phi_matrix(rng, 48, 64, phi=1.0))
+    b = jnp.asarray(make_phi_matrix(rng, 64, 32, phi=1.0))
+    for split in ("bitmask", "rn_const"):
+        base = OzimmuConfig(k=8, split=split)
+        c_naive = np.asarray(ozimmu_matmul(a, b, base.with_(accumulate="naive")))
+        c_ef = np.asarray(ozimmu_matmul(a, b, base.with_(accumulate="group_ef")))
+        # identical up to FP64 summation *order*; group sums themselves exact.
+        np.testing.assert_allclose(c_ef, c_naive, rtol=1e-15)
+
+
+def test_group_sum_exactness_int32(rng):
+    """The heart of §3.2: sum of <= r slice-pair products fits INT32 exactly."""
+    m = n = p = 64
+    a = jnp.asarray(make_phi_matrix(rng, m, n, phi=2.0))
+    b = jnp.asarray(make_phi_matrix(rng, n, p, phi=2.0))
+    cfg = VARIANTS["ozimmu_h"].with_(k=8)
+    sa, sb = split_operands(a, b, cfg)
+    g = 9  # largest fast-mode group for k=8: pairs (1,8)..(8,1)
+    pairs = [(s, g - s) for s in range(1, g)]
+    acc = np.zeros((m, p), np.int64)
+    for s, t in pairs:
+        acc += np.asarray(int8_gemm(sa.digits[s - 1], sb.digits[t - 1]), np.int64)
+    assert np.abs(acc).max() < 2**31  # the r-bound held
+    a_cat = jnp.concatenate([sa.digits[s - 1] for s, _ in pairs], axis=1)
+    b_cat = jnp.concatenate([sb.digits[t - 1] for _, t in pairs], axis=0)
+    fused = np.asarray(int8_gemm(a_cat, b_cat), np.int64)
+    np.testing.assert_array_equal(fused, acc)
+
+
+def test_rn_needs_fewer_slices_than_bitmask(rng):
+    """Paper §4.1: ozIMMU_RN-k comparable to ozIMMU-(k+1)."""
+    n = 128
+    a = make_phi_matrix(rng, n, n, phi=2.0)
+    b = make_phi_matrix(rng, n, n, phi=2.0)
+    hi, lo = dd_matmul(a, b)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+    def err(variant, k):
+        c = np.asarray(ozimmu_matmul(aj, bj, VARIANTS[variant].with_(k=k)))
+        return max_relative_error(c, hi, lo)
+
+    for k in (5, 6, 7):
+        assert err("ozimmu_rn", k) <= err("ozimmu", k) * 4.0
+        assert err("ozimmu_rn", k) <= err("ozimmu", k + 1) * 64.0
+
+
+def test_high_precision_add_counts():
+    """Paper's accounting: naive k(k+1)/2 vs EF ~k (w with chunking)."""
+    assert num_highprec_adds(8, 512, group_ef=False) == 36
+    assert num_highprec_adds(8, 512, group_ef=True) == 8
+    # chunked case r < k: group g needs ceil((g-1)/r) flushes (Alg. 6, q==r)
+    assert num_highprec_adds(4, 2, group_ef=True) == 1 + 1 + 2 + 2
+
+
+def test_error_bound_holds(rng):
+    """§5 deterministic bounds hold for the computed results."""
+    n = 96
+    a = make_phi_matrix(rng, n, n, phi=1.0)
+    b = make_phi_matrix(rng, n, n, phi=1.0)
+    hi, lo = dd_matmul(a, b)
+    for k in (4, 6, 8):
+        for variant, bound_fn in [("ozimmu", analysis.error_bound_ozimmu),
+                                  ("ozimmu_ef", analysis.error_bound_group_ef)]:
+            c = np.asarray(ozimmu_matmul(jnp.asarray(a), jnp.asarray(b),
+                                         VARIANTS[variant].with_(k=k)))
+            err = np.abs((c - hi) - lo)
+            bound = bound_fn(a, b, k)
+            assert np.all(err <= bound), (variant, k, float((err - bound).max()))
+
+
+def test_rectangular_shapes(rng):
+    a = jnp.asarray(make_phi_matrix(rng, 17, 130))
+    b = jnp.asarray(make_phi_matrix(rng, 130, 9))
+    hi, lo = dd_matmul(np.asarray(a), np.asarray(b))
+    for variant in VARIANTS:
+        c = np.asarray(ozimmu_matmul(a, b, VARIANTS[variant].with_(k=10)))
+        assert max_relative_error(c, hi, lo) < 1e-12
+
+
+def test_custom_vjp_grads_close_to_exact(rng):
+    a = jnp.asarray(make_phi_matrix(rng, 12, 24))
+    b = jnp.asarray(make_phi_matrix(rng, 24, 8))
+    cfg = VARIANTS["ozimmu_h"].with_(k=10)
+
+    def loss_oz(a, b):
+        return jnp.sum(jnp.sin(ozimmu_matmul(a, b, cfg)))
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga, gb = jax.grad(loss_oz, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), rtol=1e-9, atol=1e-12)
+
+
+def test_jit_and_vmap_compatible(rng):
+    a = jnp.asarray(make_phi_matrix(rng, 4 * 8, 16).reshape(4, 8, 16))
+    b = jnp.asarray(make_phi_matrix(rng, 16, 8))
+    cfg = VARIANTS["ozimmu_h"].with_(k=6)
+    f = jax.jit(jax.vmap(lambda x: ozimmu_matmul(x, b, cfg)))
+    out = f(a)
+    ref = jnp.einsum("bij,jk->bik", a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-8)
+
+
+def test_engine_specs(rng):
+    x = jnp.asarray(make_phi_matrix(rng, 4 * 6, 32).reshape(4, 6, 32), jnp.float32)
+    w = jnp.asarray(make_phi_matrix(rng, 32, 16), jnp.float32)
+    ref = np.asarray(jnp.einsum("abi,ij->abj", x.astype(jnp.float64),
+                                w.astype(jnp.float64)))
+    for spec in ("f32", "ozimmu_h-6:f32", "ozimmu_h-6:df32", "ozimmu-6:f32",
+                 "ozimmu_rn-6:f32", "ozimmu_ef-6:df32"):
+        eng = make_engine(spec)
+        out = np.asarray(eng(x, w), np.float64)
+        rel = np.abs(out - ref) / (np.abs(ref) + 1e-6)
+        assert rel.max() < 5e-5, (spec, rel.max())
+    bf = make_engine("bf16")(x, w)
+    assert bf.dtype == x.dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 10), n=st.integers(2, 48), p=st.integers(1, 10),
+    k=st.integers(3, 11), phi=st.floats(0, 2), seed=st.integers(0, 2**31),
+    variant=st.sampled_from(sorted(VARIANTS)),
+)
+def test_property_error_within_paper_bound(m, n, p, k, phi, seed, variant):
+    """Property: |AB - T_k| <= truncation + accumulation bound (§5) for random
+    shapes, slice counts, difficulty, and variant."""
+    rng = np.random.default_rng(seed)
+    a = make_phi_matrix(rng, m, n, phi)
+    b = make_phi_matrix(rng, n, p, phi)
+    hi, lo = dd_matmul(a, b)
+    c = np.asarray(ozimmu_matmul(jnp.asarray(a), jnp.asarray(b),
+                                 VARIANTS[variant].with_(k=k)))
+    err = np.abs((c - hi) - lo)
+    bound = analysis.error_bound_ozimmu(a, b, k)  # RN strictly sharper (§5 intro)
+    assert np.all(err <= bound + 1e-300)

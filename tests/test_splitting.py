@@ -1,0 +1,168 @@
+"""Unit + property tests for the three splitting strategies (Algs. 3, 5, 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (compute_beta, compute_r, split_bitmask, split_rn,
+                        split_rn_const, reconstruct, residual)
+from tests.conftest import make_phi_matrix
+
+SPLITTERS = {"bitmask": split_bitmask, "rn": split_rn, "rn_const": split_rn_const}
+
+
+def test_compute_beta_matches_paper():
+    # beta = min(7, floor((31 - log2 n)/2)), eq. (4)
+    assert compute_beta(256) == 7
+    assert compute_beta(1024) == 7
+    assert compute_beta(2**17) == 7
+    assert compute_beta(2**18) == 6       # (31-18)//2
+    assert compute_beta(2**20) == 5
+    assert compute_beta(2**29) == 1
+    with pytest.raises(ValueError):
+        compute_beta(2**30)
+
+
+def test_compute_r_matches_paper():
+    # r = max(1, 2^(31 - 2 beta - ceil(log2 n))), eq. (12)
+    assert compute_r(4096, 7) == 2 ** (31 - 14 - 12)
+    assert compute_r(256, 7) == 2 ** (31 - 14 - 8)
+    assert compute_r(2**20, 5) == 2 ** (31 - 10 - 20)
+    assert compute_r(2**29, 1) == 1
+
+
+@pytest.mark.parametrize("name", list(SPLITTERS))
+@pytest.mark.parametrize("axis", [0, 1])
+def test_digit_ranges(rng, name, axis):
+    a = jnp.asarray(make_phi_matrix(rng, 32, 48, phi=1.0))
+    s = SPLITTERS[name](a, 8, axis=axis)
+    d = np.asarray(s.digits, dtype=np.int32)
+    if name == "bitmask":
+        assert np.max(np.abs(d)) <= 2 ** s.beta - 1          # eq. (5) digits
+    else:
+        assert np.max(np.abs(d)) <= 2 ** (s.beta - 1)        # RN digits
+    assert s.digits.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("name", list(SPLITTERS))
+def test_scales_are_powers_of_two(rng, name):
+    a = jnp.asarray(make_phi_matrix(rng, 16, 64, phi=2.0))
+    s = SPLITTERS[name](a, 6)
+    sc = np.asarray(s.scale)
+    m, e = np.frexp(sc[sc != 0])
+    assert np.all(m == 0.5)
+
+
+@pytest.mark.parametrize("name,k", [("bitmask", 8), ("rn", 8), ("rn_const", 8)])
+def test_residual_decreases_geometrically(rng, name, k):
+    """|V_s| < 2^(-beta s + 1) g e^T — eq. (16)-ish contraction per slice."""
+    a = jnp.asarray(make_phi_matrix(rng, 24, 96, phi=0.5))
+    beta = compute_beta(96)
+    rowmax = np.max(np.abs(np.asarray(a)), axis=1)
+    prev = None
+    for kk in range(1, k + 1):
+        s = SPLITTERS[name](a, kk)
+        res = np.max(np.abs(np.asarray(residual(s, a))), axis=1)
+        bound = rowmax * 2.0 ** (-beta * kk + 2)
+        assert np.all(res <= bound + 1e-300), (name, kk)
+        if prev is not None:
+            assert np.all(res <= prev + 1e-300)
+        prev = res
+
+
+def _bounded_spread_matrix(rng, m, n):
+    """Entries with |a_ij| in [0.5, 1): exponent spread < 1 bit per row, so
+    k*beta >= 54 bits covers the full 53-bit mantissa of every element."""
+    sign = np.where(rng.uniform(size=(m, n)) < 0.5, -1.0, 1.0)
+    return sign * rng.uniform(0.5, 1.0, (m, n))
+
+
+def test_bitmask_split_is_exact_sum(rng):
+    """Bitmask slices reconstruct A bit-exactly once k*beta covers the
+    mantissa (53 bits + in-row exponent spread)."""
+    a = jnp.asarray(_bounded_spread_matrix(rng, 16, 32))
+    s = split_bitmask(a, 9)  # 9*7 = 63 > 54 bits
+    assert np.array_equal(np.asarray(reconstruct(s)), np.asarray(a))
+
+
+def test_rn_const_split_is_exact_sum(rng):
+    a = jnp.asarray(_bounded_spread_matrix(rng, 16, 32))
+    s = split_rn_const(a, 10)  # 10 RN slices (6 bits each) cover > 54 bits
+    assert np.array_equal(np.asarray(reconstruct(s)), np.asarray(a))
+
+
+def test_geometric_scale_structure(rng):
+    """scale[s] = base * 2^(-beta s) — required for group-EF accumulation."""
+    a = jnp.asarray(make_phi_matrix(rng, 8, 64))
+    for fn in (split_bitmask, split_rn_const):
+        s = fn(a, 5)
+        assert s.base is not None
+        for i in range(5):
+            expect = np.asarray(s.base) * 2.0 ** (-s.beta * (i + 1))
+            np.testing.assert_array_equal(np.asarray(s.scale[i]), expect)
+    s = split_rn(a, 5)
+    assert s.base is None
+
+
+def test_zero_rows_and_columns(rng):
+    a = np.zeros((8, 16))
+    a[3] = make_phi_matrix(rng, 1, 16)[0]
+    s = split_rn_const(jnp.asarray(a), 6)
+    assert np.all(np.isfinite(np.asarray(s.scale)))
+    rec = np.asarray(reconstruct(s))
+    assert np.array_equal(rec[a == 0], np.zeros_like(rec[a == 0]))
+    res = np.abs(rec[3] - a[3])
+    assert np.all(res <= np.max(np.abs(a[3])) * 2.0 ** (-7 * 6 + 2))
+    z = split_bitmask(jnp.zeros((4, 4)), 3)
+    assert np.all(np.asarray(z.digits) == 0)
+
+
+def test_f32_inputs(rng):
+    a32 = jnp.asarray(make_phi_matrix(rng, 16, 64, dtype=np.float32))
+    for fn in (split_bitmask, split_rn, split_rn_const):
+        s = fn(a32, 5)
+        assert s.scale.dtype == jnp.float32
+        res = np.abs(np.asarray(residual(s, a32)))
+        rowmax = np.max(np.abs(np.asarray(a32)), axis=1, keepdims=True)
+        assert np.all(res <= rowmax * 2.0 ** (-7 * 5 + 2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 12), n=st.integers(1, 40), k=st.integers(1, 10),
+    phi=st.floats(0.0, 3.0), seed=st.integers(0, 2**31),
+)
+def test_property_residual_bound_all_splitters(m, n, k, phi, seed):
+    """Property: for random shapes/difficulties, every splitter satisfies the
+    paper's per-slice residual bound and digit-range invariant."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(make_phi_matrix(rng, m, n, phi))
+    beta = compute_beta(n)
+    rowmax = np.max(np.abs(np.asarray(a)), axis=1)
+    for name, fn in SPLITTERS.items():
+        s = fn(a, k)
+        d = np.asarray(s.digits, np.int32)
+        lim = 2 ** beta - 1 if name == "bitmask" else 2 ** (beta - 1)
+        assert np.max(np.abs(d), initial=0) <= lim
+        res = np.max(np.abs(np.asarray(residual(s, a))), axis=1)
+        assert np.all(res <= rowmax * 2.0 ** (-beta * k + 2) + 1e-300)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), k=st.integers(2, 9))
+def test_property_mixed_magnitudes(seed, k):
+    """Rows mixing huge/tiny/zero entries keep exactness guarantees."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((6, 24))
+    a[0] *= 1e18
+    a[1] *= 1e-18
+    a[2, ::2] = 0.0
+    a[3] = 0.0
+    aj = jnp.asarray(a)
+    for fn in (split_bitmask, split_rn_const):
+        s = fn(aj, k)
+        assert np.all(np.isfinite(np.asarray(s.scale)))
+        res = np.abs(np.asarray(residual(s, aj)))
+        rowmax = np.max(np.abs(a), axis=1, keepdims=True)
+        assert np.all(res <= rowmax * 2.0 ** (-s.beta * k + 2) + 1e-300)
