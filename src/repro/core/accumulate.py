@@ -46,9 +46,16 @@ __all__ = [
 
 
 def int8_gemm(a8: jax.Array, b8: jax.Array) -> jax.Array:
-    """(m, n) int8 @ (n, p) int8 -> (m, p) int32, exact barring overflow."""
-    return jax.lax.dot_general(
-        a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    """(*batch, m, n) int8 @ (*batch, n, p) int8 -> (*batch, m, p) int32.
+
+    Exact barring overflow.  Leading axes are true ``dot_general`` batch
+    dimensions, so batched GEMMs hit the MXU as one batched contraction
+    instead of a python loop or a reshape-to-2D.
+    """
+    nb = a8.ndim - 2
+    dims = (((a8.ndim - 1,), (nb,)), (tuple(range(nb)), tuple(range(nb))))
+    return jax.lax.dot_general(a8, b8, dims,
+                               preferred_element_type=jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -111,8 +118,9 @@ def int32_to_df32(p: jax.Array) -> DF32:
 # ---------------------------------------------------------------------------
 
 def _outer_scale(p: jax.Array, sa: jax.Array, sb: jax.Array) -> jax.Array:
-    """diag(sa) @ p @ diag(sb); scales are powers of two (exact in fp)."""
-    return p * sa[:, None] * sb[None, :]
+    """diag(sa) @ p @ diag(sb) per batch element; scales are powers of two
+    (exact in fp).  p (*batch, m, p); sa (*batch, m); sb (*batch, p)."""
+    return p * sa[..., :, None] * sb[..., None, :]
 
 
 def _term_pairs(k: int) -> Sequence[Tuple[int, int]]:
@@ -136,15 +144,19 @@ def num_highprec_adds(k: int, r: int, group_ef: bool) -> int:
 
 def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
                  out_dtype=None) -> jax.Array:
-    """One INT8 GEMM + one high-precision scaled add per slice pair."""
+    """One INT8 GEMM + one high-precision scaled add per slice pair.
+
+    Batched: digits may be ``(k, *batch, m, n)`` / ``(k, *batch, n, p)``;
+    every slice-pair product is then ONE batched int8 ``dot_general``.
+    """
     assert sa.axis == 0 and sb.axis == 1, "A needs row scales, B column scales"
     k = sa.digits.shape[0]
     assert sb.digits.shape[0] == k
-    m, p = sa.digits.shape[1], sb.digits.shape[2]
+    out_shape = sa.digits.shape[1:-1] + (sb.digits.shape[-1],)
     out_dtype = out_dtype or sa.scale.dtype
 
     if accum == "df32":
-        acc = df32_zero((m, p))
+        acc = df32_zero(out_shape)
         for s, t in _term_pairs(k):
             prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1])
             term = int32_to_df32(prod)
@@ -156,7 +168,7 @@ def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
         return acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
-    c = jnp.zeros((m, p), acc_dtype)
+    c = jnp.zeros(out_shape, acc_dtype)
     for s, t in _term_pairs(k):
         prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1]).astype(acc_dtype)
         c = c + _outer_scale(prod, sa.scale[s - 1].astype(acc_dtype),
@@ -178,9 +190,10 @@ def _group_chunks(k: int, r: int):
 
 def group_gemm_concat(sa: Split, sb: Split, pairs) -> jax.Array:
     """sum_{(s,t) in pairs} A_s @ B_t as ONE int8 GEMM via contraction-axis
-    concatenation — the TPU-native realization of Alg. 6's INT32 group sum."""
-    a_cat = jnp.concatenate([sa.digits[s - 1] for s, _ in pairs], axis=1)
-    b_cat = jnp.concatenate([sb.digits[t - 1] for _, t in pairs], axis=0)
+    concatenation — the TPU-native realization of Alg. 6's INT32 group sum.
+    Batched digits concatenate along the trailing contraction axis."""
+    a_cat = jnp.concatenate([sa.digits[s - 1] for s, _ in pairs], axis=-1)
+    b_cat = jnp.concatenate([sb.digits[t - 1] for _, t in pairs], axis=-2)
     return int8_gemm(a_cat, b_cat)
 
 
@@ -198,15 +211,15 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
                          "(bitmask or rn_const splitting); got adaptive RN")
     k = sa.digits.shape[0]
     beta = sa.beta
-    n = sa.digits.shape[2]
-    m, p = sa.digits.shape[1], sb.digits.shape[2]
+    n = sa.digits.shape[-1]
+    out_shape = sa.digits.shape[1:-1] + (sb.digits.shape[-1],)
     out_dtype = out_dtype or sa.scale.dtype
     if r is None:
         r = compute_r(n, beta)
     gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
 
     if accum == "df32":
-        acc = df32_zero((m, p))
+        acc = df32_zero(out_shape)
         base_a = sa.base.astype(jnp.float32)
         base_b = sb.base.astype(jnp.float32)
         for g, pairs in _group_chunks(k, r):
@@ -219,7 +232,7 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
         return acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
-    c = jnp.zeros((m, p), acc_dtype)
+    c = jnp.zeros(out_shape, acc_dtype)
     base_a = sa.base.astype(acc_dtype)
     base_b = sb.base.astype(acc_dtype)
     for g, pairs in _group_chunks(k, r):

@@ -7,11 +7,25 @@ Specs (CLI flag ``--matmul_engine``):
   * ``ozimmu[-k]``, ``ozimmu_rn[-k]``, ``ozimmu_ef[-k]``, ``ozimmu_h[-k]``
     optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper).
 
-The engine is a small immutable object passed through model configs; calling
-it contracts the last axis of ``x`` with the first axis of ``w`` (the shape
-every model projection in this repo reduces to).  For ozimmu specs the
-operands are flattened to 2-D, emulated via INT8 slice GEMMs, and reshaped
-back; gradients flow through the custom VJP.
+The engine is a small immutable object passed through model configs.  Two
+entry points:
+
+  * ``engine(x, w)`` — contract the last axis of ``x`` with the first axis
+    of ``w`` (the shape every model projection reduces to).  Leading axes of
+    ``x`` are free dims of a single ``dot_general``; nothing is reshaped to
+    2-D on the way in.
+  * ``engine.dot_general(lhs, rhs, dimension_numbers)`` — arbitrary batched
+    contraction (attention scores, MoE expert GEMMs, ...).  For ozimmu
+    specs this is :func:`repro.core.ozimmu.ozimmu_dot_general`: batch dims
+    ride natively through the INT8 slice GEMMs and gradients flow through
+    the emulated custom VJP.
+
+Accumulator-dtype footgun (documented in docs/engine.md): an ozimmu spec
+with ``accum_dtype="f64"`` only computes in f64 when ``jax_enable_x64`` is
+on; otherwise the engine *silently* downgrades the compute dtype to f32
+(f64 constants would be truncated by JAX anyway — doing it explicitly keeps
+the emulation's exactness invariants intact).  Use ``:df32`` for
+high-precision accumulation that does not depend on x64 mode.
 """
 from __future__ import annotations
 
@@ -40,26 +54,36 @@ class MatmulEngine:
     def ozimmu_config(self) -> Optional[ozimmu.OzimmuConfig]:
         return ozimmu.parse_spec(self.spec) if self.is_ozimmu else None
 
-    def __call__(self, x: jax.Array, w: jax.Array) -> jax.Array:
-        """Contract x[..., n] with w[n, ...] -> out[..., ...]."""
+    def dot_general(self, lhs: jax.Array, rhs: jax.Array, dimension_numbers,
+                    out_dtype=None) -> jax.Array:
+        """Contract ``lhs`` with ``rhs`` under standard lax dimension
+        numbers.  Returns ``lhs.dtype`` unless ``out_dtype`` is given (e.g.
+        f32 attention scores feeding an online softmax)."""
+        out_dtype = out_dtype or lhs.dtype
         if not self.is_ozimmu:
             dt = _NATIVE[self.spec]
+            # accumulate in f32, except for the f64 reference spec — its
+            # whole point is full f64 accumulation
+            acc = jnp.float64 if dt == jnp.float64 else jnp.float32
             out = jax.lax.dot_general(
-                x.astype(dt), w.astype(dt), (((x.ndim - 1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            return out.astype(x.dtype)
+                lhs.astype(dt), rhs.astype(dt), dimension_numbers,
+                preferred_element_type=acc)
+            return out.astype(out_dtype)
 
         cfg = self.ozimmu_config
-        n = x.shape[-1]
-        assert w.shape[0] == n, (x.shape, w.shape)
-        lead, tail = x.shape[:-1], w.shape[1:]
-        x2 = x.reshape(-1, n)
-        w2 = w.reshape(n, -1)
+        # f64 accumulation needs x64 mode; otherwise downgrade (see module
+        # docstring — the "silent f64 -> f32" footgun).
         compute_dtype = jnp.float64 if cfg.accum_dtype == "f64" and \
             jax.config.jax_enable_x64 else jnp.float32
-        out = ozimmu.ozimmu_matmul(x2.astype(compute_dtype),
-                                   w2.astype(compute_dtype), cfg)
-        return out.reshape(*lead, *tail).astype(x.dtype)
+        out = ozimmu.ozimmu_dot_general(
+            lhs.astype(compute_dtype), rhs.astype(compute_dtype),
+            dimension_numbers, cfg)
+        return out.astype(out_dtype)
+
+    def __call__(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """Contract x[..., n] with w[n, ...] -> out[..., ...]."""
+        assert w.shape[0] == x.shape[-1], (x.shape, w.shape)
+        return self.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
 
 
 def make_engine(spec: str) -> MatmulEngine:

@@ -11,23 +11,38 @@ The four named method variants of the paper:
   ``ozimmu_h``   RN const (Alg8) group-EF (Alg6/7)      proposed §3.3
   =============  ==============  =====================  ====================
 
-``ozimmu_matmul`` is differentiable (custom VJP: the cotangent GEMMs run
-through the same emulation), jit/vmap/shard-compatible (everything is plain
-lax), and supports f64 (paper-faithful DGEMM emulation) and f32 inputs with
-``f64``/``f32``/``df32`` accumulators.
+Two entry points:
+
+  * ``ozimmu_matmul(a, b, cfg)`` — the paper's rank-2 ``(m,n)@(n,p)`` GEMM.
+  * ``ozimmu_dot_general(a, b, dimension_numbers, cfg)`` — a drop-in
+    emulated ``jax.lax.dot_general``: arbitrary batch dimensions and
+    contraction axes.  Batch dims stay true batch dims all the way into the
+    int8 slice GEMMs (no reshape-to-2D), which is what batched attention
+    scores, MoE expert GEMMs and vmapped training steps need.
+
+Both are differentiable (custom VJP written against general dimension
+numbers: the cotangent contractions run through the same emulation),
+jit/vmap/shard-compatible (everything is plain lax), and support f64
+(paper-faithful DGEMM emulation) and f32 inputs with ``f64``/``f32``/``df32``
+accumulators.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import accumulate, splitting
 
-__all__ = ["OzimmuConfig", "VARIANTS", "ozimmu_matmul", "parse_spec"]
+__all__ = ["OzimmuConfig", "VARIANTS", "ozimmu_matmul", "ozimmu_dot_general",
+           "parse_spec"]
+
+DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
+                         Tuple[Tuple[int, ...], Tuple[int, ...]]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,8 +85,11 @@ def parse_spec(spec: str) -> OzimmuConfig:
 
 
 def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig):
-    """Step (i)+(ii): slice A row-wise and B column-wise."""
-    n = a.shape[1]
+    """Step (i)+(ii): slice A row-wise and B column-wise.
+
+    a (*batch, m, n), b (*batch, n, p) — scales are per batch element.
+    """
+    n = a.shape[-1]
     beta = splitting.compute_beta(n)
     splitter = _SPLITTERS[cfg.split]
     sa = splitter(a, cfg.k, beta=beta, axis=0)
@@ -79,9 +97,17 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig):
     return sa, sb
 
 
-def _matmul_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
-        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
+    """Emulated batched matmul on canonical operands:
+    (*batch, m, n) @ (*batch, n, p) -> (*batch, m, p)."""
+    if a.ndim < 2 or b.ndim < 2 or a.shape[-1] != b.shape[-2] or \
+            a.shape[:-2] != b.shape[:-2]:
+        raise ValueError(f"bad batched GEMM shapes {a.shape} @ {b.shape}")
+    if cfg.accum_dtype == "f64" and not jax.config.jax_enable_x64:
+        # without x64 mode JAX truncates f64 to f32 anyway; downgrade
+        # explicitly (the documented footgun — see docs/engine.md) instead
+        # of emitting one truncation warning per accumulation step
+        cfg = cfg.with_(accum_dtype="f32")
     sa, sb = split_operands(a, b, cfg)
     group_gemm_fn = None
     if cfg.use_pallas:
@@ -95,26 +121,151 @@ def _matmul_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
         group_gemm_fn=group_gemm_fn)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
+# ---------------------------------------------------------------------------
+# general dot_general: canonicalization + implementation
+# ---------------------------------------------------------------------------
+
+def _canonicalize_dnums(dimension_numbers) -> DimensionNumbers:
+    """Nested tuples (hashable: dimension_numbers is a nondiff VJP arg)."""
+    (ac, bc), (ab, bb) = dimension_numbers
+    return ((tuple(map(int, ac)), tuple(map(int, bc))),
+            (tuple(map(int, ab)), tuple(map(int, bb))))
+
+
+def _remaining(ndim: int, *exclude: Sequence[int]):
+    ex = set()
+    for e in exclude:
+        ex.update(e)
+    return [i for i in range(ndim) if i not in ex]
+
+
+def _ranges_like(*seqs):
+    start = 0
+    out = []
+    for s in seqs:
+        out.append(list(range(start, start + len(s))))
+        start += len(s)
+    return out
+
+
+def _argsort(seq):
+    return sorted(range(len(seq)), key=seq.__getitem__)
+
+
+def _dot_general_impl(a: jax.Array, b: jax.Array,
+                      dnums: DimensionNumbers, cfg: OzimmuConfig) -> jax.Array:
+    """Normalize to the canonical batched form and run the emulation.
+
+    Layout convention matches ``jax.lax.dot_general``: output is
+    (*batch [lhs order], *lhs free [ascending], *rhs free [ascending]).
+    Multiple contraction axes are flattened into one inner dimension (beta /
+    r are computed from the TOTAL contraction length, so the INT32
+    no-overflow guarantees still hold); free axes flatten into m / p and are
+    restored afterwards — batch axes are never flattened away.
+    """
+    (ac, bc), (ab, bb) = dnums
+    if len(ac) != len(bc) or len(ab) != len(bb):
+        raise ValueError(f"mismatched dimension numbers {dnums}")
+    for i, j in zip(ac, bc):
+        if a.shape[i] != b.shape[j]:
+            raise ValueError(
+                f"contraction size mismatch {a.shape} @ {b.shape}: {dnums}")
+    for i, j in zip(ab, bb):
+        if a.shape[i] != b.shape[j]:
+            raise ValueError(
+                f"batch size mismatch {a.shape} @ {b.shape}: {dnums}")
+    a_free = _remaining(a.ndim, ac, ab)
+    b_free = _remaining(b.ndim, bc, bb)
+    batch_shape = tuple(a.shape[i] for i in ab)
+    m_shape = tuple(a.shape[i] for i in a_free)
+    p_shape = tuple(b.shape[i] for i in b_free)
+    n = math.prod(a.shape[i] for i in ac)
+    m = math.prod(m_shape)
+    p = math.prod(p_shape)
+    # (*batch, m, n) with contraction axes in pairing order (ac[i] <-> bc[i])
+    a3 = jnp.transpose(a, list(ab) + a_free + list(ac)).reshape(
+        batch_shape + (m, n))
+    b3 = jnp.transpose(b, list(bb) + list(bc) + b_free).reshape(
+        batch_shape + (n, p))
+    out = _bmm_impl(a3, b3, cfg)
+    return out.reshape(batch_shape + m_shape + p_shape)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP against general dimension numbers
+# ---------------------------------------------------------------------------
+
+def _transpose_operand(g, other, target_ndim: int, dnums: DimensionNumbers,
+                       cfg: OzimmuConfig, swap_ans: bool):
+    """Cotangent of the lhs of ``dot_general(x, y, dnums)`` (mirror of
+    jax._src.lax's ``_dot_general_transpose_lhs``, with the contraction
+    itself emulated).  For the rhs cotangent, call with the roles of x and y
+    swapped in ``dnums`` and ``swap_ans=True``."""
+    (xc, yc), (xb, yb) = dnums
+    x_kept = _remaining(target_ndim, xc, xb)
+    y_kept = _remaining(other.ndim, yc, yb)
+    if swap_ans:
+        g_batch, g_y_kept, _ = _ranges_like(xb, y_kept, x_kept)
+    else:
+        g_batch, _, g_y_kept = _ranges_like(xb, x_kept, y_kept)
+    dims = ((tuple(g_y_kept), tuple(y_kept)), (tuple(g_batch), tuple(yb)))
+    dx = _dot_general_impl(g, other, _canonicalize_dnums(dims), cfg)
+    xc_sorted_by_yc = [xc[i] for i in _argsort(yc)]
+    out_axes = _argsort(list(xb) + x_kept + xc_sorted_by_yc)
+    return jnp.transpose(dx, out_axes)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _oz_dot_general(a: jax.Array, b: jax.Array, dnums: DimensionNumbers,
+                    cfg: OzimmuConfig) -> jax.Array:
+    return _dot_general_impl(a, b, dnums, cfg)
+
+
+def _fwd(a, b, dnums, cfg):
+    return _dot_general_impl(a, b, dnums, cfg), (a, b)
+
+
+def _bwd(dnums, cfg, res, g):
+    a, b = res
+    (ac, bc), (ab, bb) = dnums
+    # Cotangents through the same emulated contraction (transposed dims are
+    # free re-slices; no precision leaves the scheme).
+    da = _transpose_operand(g, b, a.ndim, dnums, cfg, swap_ans=False)
+    db = _transpose_operand(g, a, b.ndim, ((bc, ac), (bb, ab)), cfg,
+                            swap_ans=True)
+    return da, db
+
+
+_oz_dot_general.defvjp(_fwd, _bwd)
+
+
+def ozimmu_dot_general(a: jax.Array, b: jax.Array, dimension_numbers,
+                       cfg: OzimmuConfig = VARIANTS["ozimmu_h"]) -> jax.Array:
+    """Emulated ``jax.lax.dot_general`` via k-slice INT8 GEMMs.
+
+    ``dimension_numbers`` is the standard lax contract,
+    ``((lhs_contract, rhs_contract), (lhs_batch, rhs_batch))``; the output
+    layout is lax's (batch dims, lhs free dims, rhs free dims).  Batch
+    dimensions are carried natively through splitting (per-batch row/col
+    scales) and the int8 ``dot_general``s.  Differentiable: the custom VJP
+    evaluates both cotangents with the same emulation under the transposed
+    dimension numbers.
+
+    Example — batched attention-score-like contraction::
+
+        out = ozimmu_dot_general(q, k, (((2,), (2,)), ((0,), (0,))), cfg)
+        # q (B, Lq, D), k (B, Lk, D)  ->  out (B, Lq, Lk)
+    """
+    return _oz_dot_general(a, b, _canonicalize_dnums(dimension_numbers), cfg)
+
+
 def ozimmu_matmul(a: jax.Array, b: jax.Array,
                   cfg: OzimmuConfig = VARIANTS["ozimmu_h"]) -> jax.Array:
     """Emulated high-precision ``a @ b`` via k-slice INT8 GEMMs.
 
     a: (m, n), b: (n, p), both f32 or f64.  Returns (m, p) in a.dtype.
+    The rank-2 special case of :func:`ozimmu_dot_general`.
     """
-    return _matmul_impl(a, b, cfg)
-
-
-def _fwd(a, b, cfg):
-    return _matmul_impl(a, b, cfg), (a, b)
-
-
-def _bwd(cfg, res, g):
-    a, b = res
-    # Cotangents through the same emulated GEMM (transposes are free re-slices).
-    da = _matmul_impl(g, b.T, cfg)
-    db = _matmul_impl(a.T, g, cfg)
-    return da, db
-
-
-ozimmu_matmul.defvjp(_fwd, _bwd)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    return ozimmu_dot_general(a, b, (((1,), (0,)), ((), ())), cfg)

@@ -52,14 +52,17 @@ __all__ = [
 
 
 class Split(NamedTuple):
-    """k int8 slices of a matrix plus per-slice scale vectors.
+    """k int8 slices of a (possibly batched) matrix plus per-slice scales.
 
     Attributes:
-      digits: ``(k, m, n)`` int8 slice matrices.
-      scale:  ``(k, r)`` per-slice scale vector (r = rows for ``axis=0``,
-              columns for ``axis=1``); always a power of two.
-      base:   ``(r,)`` geometric base such that ``scale[s] = base * 2^(-beta*(s+1))``
-              (0-indexed s), or ``None`` for the adaptive RN strategy.
+      digits: ``(k, *batch, m, n)`` int8 slice matrices.  The matrix lives in
+              the trailing two axes; any leading axes are batch dimensions
+              (splitting is purely row/column-local, so batching is free).
+      scale:  ``(k, *batch, r)`` per-slice scale vector (r = rows for
+              ``axis=0``, columns for ``axis=1``); always a power of two.
+      base:   ``(*batch, r)`` geometric base such that
+              ``scale[s] = base * 2^(-beta*(s+1))`` (0-indexed s), or ``None``
+              for the adaptive RN strategy.
       beta:   bits per slice.
       axis:   0 if ``scale`` indexes rows of the matrix, 1 for columns.
     """
@@ -105,8 +108,14 @@ def _mantissa_bits(dtype) -> int:
 
 
 def _rowmax(a: jax.Array, axis: int) -> jax.Array:
-    """max_j |a_ij| along the non-scale axis; shape (r,)."""
-    return jnp.max(jnp.abs(a), axis=1 - axis)
+    """max_j |a_ij| along the non-scale matrix axis; shape (*batch, r)."""
+    return jnp.max(jnp.abs(a), axis=-1 if axis == 0 else -2)
+
+
+def _contract_len(a: jax.Array, axis: int) -> int:
+    """Length of the contraction axis: columns for axis=0 (A), rows for
+    axis=1 (B)."""
+    return a.shape[-1] if axis == 0 else a.shape[-2]
 
 
 def _pow2_floor(x: jax.Array) -> jax.Array:
@@ -125,8 +134,15 @@ def _pow2_ceil(x: jax.Array) -> jax.Array:
 
 
 def _bcast(v: jax.Array, axis: int) -> jax.Array:
-    """Broadcast a per-row/col vector against the matrix."""
-    return v[:, None] if axis == 0 else v[None, :]
+    """Broadcast a (*batch, r) per-row/col vector against the matrix."""
+    return v[..., :, None] if axis == 0 else v[..., None, :]
+
+
+def _geo_scales(base: jax.Array, beta: int, k: int) -> jax.Array:
+    """scale[s] = base * 2^(-beta*(s+1)), shape (k, *batch, r)."""
+    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)],
+                       base.dtype)
+    return base[None] * exps.reshape((k,) + (1,) * base.ndim)
 
 
 def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
@@ -137,9 +153,12 @@ def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
     fixed-point representation of ``a / 2^(floor(log2 rowmax)+1)``:
     truncation toward zero keeps exactly the leading bits, and the residual
     update is exact (difference of a float and its truncation).
+
+    Accepts leading batch dimensions: ``a`` is ``(*batch, m, n)`` and every
+    row/column scale is computed per batch element.
     """
     if beta is None:
-        beta = compute_beta(a.shape[1 - axis])
+        beta = compute_beta(_contract_len(a, axis))
     dt = a.dtype
     two_beta = jnp.asarray(2.0 ** beta, dt)
 
@@ -152,9 +171,7 @@ def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
         r = r - d                                       # exact
         digits.append(d.astype(jnp.int8))               # |d| <= 2^beta - 1 <= 127
     digits = jnp.stack(digits)
-    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)], dt)
-    scale = base[None, :] * exps[:, None]
-    return Split(digits, scale, base, beta, axis)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
 
 
 def _rn_extract(r: jax.Array, grid: jax.Array, axis: int):
@@ -185,10 +202,11 @@ def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
     ``2^ceil(log2 rowmax(residual)) * 2^(1-beta)``; digits lie in
     [-2^(beta-1), 2^(beta-1)].  Scales are *not* geometric across slices
     (``base is None``), so only naive accumulation (Alg. 4) applies — this is
-    the "ozIMMU_RN" configuration of the paper.
+    the "ozIMMU_RN" configuration of the paper.  Batched like
+    :func:`split_bitmask`.
     """
     if beta is None:
-        beta = compute_beta(a.shape[1 - axis])
+        beta = compute_beta(_contract_len(a, axis))
     dt = a.dtype
     grid_factor = 2.0 ** (1 - beta)
 
@@ -211,9 +229,10 @@ def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
     (one pass over the matrix instead of k); slice s rounds the residual to
     grid ``mu * 2^(-beta*(s-1))``.  Slice scales form the geometric sequence
     required by group-wise error-free accumulation — the "ozIMMU_H" splitting.
+    Batched like :func:`split_bitmask`.
     """
     if beta is None:
-        beta = compute_beta(a.shape[1 - axis])
+        beta = compute_beta(_contract_len(a, axis))
     dt = a.dtype
     two_beta = jnp.asarray(2.0 ** beta, dt)
 
@@ -229,9 +248,7 @@ def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
     digits = jnp.stack(digits)
     # scale[s] = mu * 2^(-beta*(s-1)) = (mu * 2^beta) * 2^(-beta*s)
     base = mu * (2.0 ** beta)
-    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)], dt)
-    scale = base[None, :] * exps[:, None]
-    return Split(digits, scale, base, beta, axis)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
 
 
 def reconstruct(split: Split, dtype=None) -> jax.Array:
@@ -239,10 +256,17 @@ def reconstruct(split: Split, dtype=None) -> jax.Array:
     dt = dtype or split.scale.dtype
     d = split.digits.astype(dt)
     if split.axis == 0:
-        return jnp.sum(d * split.scale[:, :, None], axis=0)
-    return jnp.sum(d * split.scale[:, None, :], axis=0)
+        return jnp.sum(d * split.scale[..., :, None], axis=0)
+    return jnp.sum(d * split.scale[..., None, :], axis=0)
 
 
 def residual(split: Split, a: jax.Array) -> jax.Array:
-    """Truncation error V_k = A - sum_s A_s (== W_k for axis=1)."""
-    return a - reconstruct(split, a.dtype)
+    """Truncation error V_k = A - sum_s A_s (== W_k for axis=1).
+
+    Reconstructs in a wide accumulator: summing round-to-nearest slices in
+    f32 rounds away the very residual being measured (RN partial sums need
+    more mantissa bits than f32 has; bitmask prefix sums are exact), so for
+    f32 inputs the slice sum runs in f64 when x64 is enabled.
+    """
+    wide = jnp.float64 if jax.config.jax_enable_x64 else a.dtype
+    return (a.astype(wide) - reconstruct(split, wide)).astype(a.dtype)

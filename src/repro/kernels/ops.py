@@ -1,9 +1,21 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handles: padding to tile multiples, row-scale preparation, slice-pair
-stacking for group GEMMs, and the interpret-mode switch (CPU validation —
-this container has no TPU; `interpret=True` runs the kernel bodies in
-Python/XLA-CPU and is the correctness reference path used by tests).
+stacking for group GEMMs, and the interpret-mode switch.
+
+The ``INTERPRET`` module switch
+-------------------------------
+``INTERPRET = True`` runs every Pallas kernel body through the interpreter:
+the grid is executed sequentially in Python and the body lowers to plain
+XLA ops on the host backend.  This is the *correctness reference path* —
+it is what the test suite exercises (this container has no TPU) and it is
+bit-identical to the compiled Mosaic kernel for the integer/exact-float
+arithmetic used here.  Flip to ``False`` on real TPUs to compile the
+kernels; nothing else in the call sites changes.  The switch is a module
+global (not a per-call flag) so that benchmarks, tests, and the engine all
+agree on one execution mode; override it *before* the first traced call —
+the wrappers are ``jit``'d with ``interpret`` as a static argument, so
+earlier traces are cached per mode.
 """
 from __future__ import annotations
 
@@ -80,21 +92,27 @@ def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
 
     Signature matches the ``group_gemm_fn`` hook in
     :func:`repro.core.accumulate.matmul_group_ef` (after partial application
-    of sa, sb).
+    of sa, sb).  Batched splits — digits ``(k, *batch, m, n)`` — map onto
+    the kernel's leading batch grid axis (flattened to one axis, restored
+    on exit); output is ``(*batch, m, p)``.
     """
     idx_a = [s - 1 for s, _ in pairs]
     idx_b = [t - 1 for _, t in pairs]
-    a8 = sa.digits[jnp.asarray(idx_a)]
+    a8 = sa.digits[jnp.asarray(idx_a)]      # (G, *batch, m, n)
     b8 = sb.digits[jnp.asarray(idx_b)]
-    G, m, n = a8.shape
-    p = b8.shape[2]
+    G = a8.shape[0]
+    batch = a8.shape[1:-2]
+    m, n = a8.shape[-2], a8.shape[-1]
+    p = b8.shape[-1]
+    a8 = jnp.moveaxis(a8, 0, -3).reshape((-1, G, m, n))
+    b8 = jnp.moveaxis(b8, 0, -3).reshape((-1, G, n, p))
     bm = _tile_for(m, _gg.DEFAULT_BM, 128)
     bp = _tile_for(p, _gg.DEFAULT_BP, 128)
     bn = _tile_for(n, _gg.DEFAULT_BN, 128)
-    a8 = _pad_to(a8, (1, bm, bn))
-    b8 = _pad_to(b8, (1, bn, bp))
+    a8 = _pad_to(a8, (1, 1, bm, bn))
+    b8 = _pad_to(b8, (1, 1, bn, bp))
     out = _gg.group_gemm(a8, b8, bm=bm, bp=bp, bn=bn, interpret=INTERPRET)
-    return out[:m, :p]
+    return out[:, :m, :p].reshape(batch + (m, p))
 
 
 def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,

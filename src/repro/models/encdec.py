@@ -89,7 +89,8 @@ def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
         k = L.apply_rope(k, cos, sin)
         q = shard(q, "batch", "seq", "heads", "head_dim")
         out = L.attention_flash(q, k, v, causal=False,
-                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                engine=eng)
         x = x + eng(out.reshape(B, F, H * hd), lp["attn"]["wo"])
         x = T.mlp_block(lp, cfg, x)
         return x, None
@@ -121,7 +122,8 @@ def _dec_layer(lp, cfg, x, cos, sin, memory=None, *, self_cache=None,
         k, v = cross_kv_cache
     q = shard(q, "batch", "seq", "heads", "head_dim")
     out = L.attention_flash(q, k, v, causal=False,
-                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            engine=eng)
     x = x + eng(out.reshape(B, Lq, H * hd), lp["cross"]["wo"])
     x = T.mlp_block(lp, cfg, x)
     return x, new_kv

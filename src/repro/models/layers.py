@@ -18,6 +18,21 @@ from repro.distributed.sharding import shard
 NEG_INF = -1e30
 
 
+def _edot(engine, lhs, rhs, dimension_numbers, out_dtype=None):
+    """Batched contraction for the attention blocks.  With an ozimmu engine
+    the score/output GEMMs (and their cotangents) run inside the INT8
+    emulation as native batched ``dot_general``s.  For native specs — and
+    for ``engine=None`` library use — this stays a plain lax.dot_general,
+    bit-identical to the einsums it replaced: attention keeps its own
+    mixed-precision discipline (f32 scores/probabilities feeding the online
+    softmax and its backward), which an engine-dtype cast would truncate."""
+    if engine is None or not engine.is_ozimmu:
+        return lax.dot_general(lhs, rhs, dimension_numbers,
+                               preferred_element_type=out_dtype)
+    return engine.dot_general(lhs, rhs, dimension_numbers,
+                              out_dtype=out_dtype)
+
+
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     dt = x.dtype
     x = x.astype(jnp.float32)
@@ -63,7 +78,7 @@ def _scores_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
 def attention_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     q_chunk: int = 1024, kv_chunk: int = 1024,
-                    q_offset: int = 0) -> jax.Array:
+                    q_offset: int = 0, engine=None) -> jax.Array:
     """Chunked online-softmax (flash-style) GQA attention, pure JAX.
 
     q: (B, Lq, H, D); k, v: (B, Lk, KV, D/Dv) with H % KV == 0 (Dv may
@@ -73,8 +88,12 @@ def attention_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
     autodiff of the forward scan stacks per-block probability matrices as
     scan residuals — the full O(L^2) attention matrix in f32 (measured:
     4.3 GB/device/remat-block for the internlm2 train_4k cell).
+
+    ``engine`` (a MatmulEngine, hashable, nondiff) routes the score and
+    output contractions — forward AND the recomputed backward blocks —
+    through ``engine.dot_general`` as batched-over-(B, KV) contractions.
     """
-    return _flash(q, k, v, bool(causal), window, int(q_chunk),
+    return _flash(q, k, v, engine, bool(causal), window, int(q_chunk),
                   int(kv_chunk), int(q_offset))
 
 
@@ -89,7 +108,8 @@ def _flash_dims(q, k, v, q_chunk, kv_chunk):
     return B, Lq, H, D, Lk, KV, Dv, G, qc, kc, nq, nk
 
 
-def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+def _flash_fwd_impl(q, k, v, engine, causal, window, q_chunk, kv_chunk,
+                    q_offset):
     B, Lq, H, D, Lk, KV, Dv, G, qc, kc, nq, nk = _flash_dims(
         q, k, v, q_chunk, kv_chunk)
     q = jnp.pad(q, ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
@@ -109,8 +129,10 @@ def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
             kblk = kg[:, ki]
             vblk = vg[:, ki]
             k_pos = ki * kc + jnp.arange(kc)
-            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
-                           preferred_element_type=jnp.float32)
+            # scores: einsum "bqkgd,bskd->bkgqs" as a (B, KV)-batched
+            # dot_general (contract d) so an ozimmu engine can emulate it
+            s = _edot(engine, qblk, kblk, (((4,), (3,)), ((0, 2), (0, 2))),
+                      out_dtype=jnp.float32).transpose(0, 1, 3, 2, 4)
             mask = _scores_mask(q_pos, k_pos, causal, window)
             mask &= (k_pos < Lk)[None, :]
             s = jnp.where(mask[None, None, None], s, NEG_INF)
@@ -118,8 +140,10 @@ def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m_run - m_new)
             l_new = l_run * corr + p.sum(axis=-1)
-            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), vblk,
-                            preferred_element_type=jnp.float32)
+            # output: einsum "bkgqs,bskd->bkgqd" (contract s)
+            pv = _edot(engine, p.astype(v.dtype), vblk,
+                       (((4,), (1,)), ((0, 1), (0, 2))),
+                       out_dtype=jnp.float32)
             acc = acc * corr[..., None] + pv
             return (m_new, l_new, acc), None
 
@@ -139,8 +163,8 @@ def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
     return out[:, :Lq].astype(q.dtype), (outs, lses)
 
 
-def _flash_bwd_impl(q, k, v, outs, lses, dout, causal, window, q_chunk,
-                    kv_chunk, q_offset):
+def _flash_bwd_impl(q, k, v, outs, lses, dout, engine, causal, window,
+                    q_chunk, kv_chunk, q_offset):
     """True flash backward: recompute p blockwise; never materialize L^2."""
     B, Lq, H, D, Lk, KV, Dv, G, qc, kc, nq, nk = _flash_dims(
         q, k, v, q_chunk, kv_chunk)
@@ -167,28 +191,35 @@ def _flash_bwd_impl(q, k, v, outs, lses, dout, causal, window, q_chunk,
             dq_acc, dk_blk, dv_blk = carry
             qblk = qg[:, qi] * scale           # (B, qc, KV, G, D)
             q_pos = qi * qc + jnp.arange(qc) + q_offset
-            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
-                           preferred_element_type=jnp.float32)
+            # recomputed scores (same contraction as forward)
+            s = _edot(engine, qblk, kblk, (((4,), (3,)), ((0, 2), (0, 2))),
+                      out_dtype=jnp.float32).transpose(0, 1, 3, 2, 4)
             mask = _scores_mask(q_pos, k_pos, causal, window)
             mask &= (k_pos < Lk)[None, :]
             s = jnp.where(mask[None, None, None], s, NEG_INF)
             p = jnp.exp(s - lses[qi][..., None])            # (B,KV,G,qc,kc)
             do_blk = dg[qi]                                 # (B,KV,G,qc,Dv)
-            dv_blk = dv_blk + jnp.einsum(
-                "bkgqs,bkgqd->bskd", p, do_blk,
-                preferred_element_type=jnp.float32)
-            dp = jnp.einsum("bkgqd,bskd->bkgqs", do_blk,
-                            vblk.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+            # dv: einsum "bkgqs,bkgqd->bskd" (contract g, q)
+            dv_blk = dv_blk + _edot(
+                engine, p, do_blk, (((2, 3), (2, 3)), ((0, 1), (0, 1))),
+                out_dtype=jnp.float32).transpose(0, 2, 1, 3)
+            # dp: einsum "bkgqd,bskd->bkgqs" (contract d)
+            dp = _edot(engine, do_blk, vblk.astype(jnp.float32),
+                       (((4,), (3,)), ((0, 1), (0, 2))),
+                       out_dtype=jnp.float32)
             ds = p * (dp - delta[qi][..., None])            # (B,KV,G,qc,kc)
-            dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds,
-                                kblk.astype(jnp.float32),
-                                preferred_element_type=jnp.float32) * scale
+            # dq: einsum "bkgqs,bskd->bqkgd" (contract s)
+            dq_blk = _edot(engine, ds, kblk.astype(jnp.float32),
+                           (((4,), (1,)), ((0, 1), (0, 2))),
+                           out_dtype=jnp.float32
+                           ).transpose(0, 3, 1, 2, 4) * scale
             dq_acc = dq_acc.at[:, qi].add(dq_blk)
+            # dk: einsum "bkgqs,bqkgd->bskd" (contract g, q);
             # qblk already carries `scale`, so dk needs no extra factor
-            dk_blk = dk_blk + jnp.einsum(
-                "bkgqs,bqkgd->bskd", ds, qblk.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
+            dk_blk = dk_blk + _edot(
+                engine, ds, qblk.astype(jnp.float32),
+                (((2, 3), (3, 1)), ((0, 1), (0, 2))),
+                out_dtype=jnp.float32).transpose(0, 2, 1, 3)
             return (dq_acc, dk_blk, dv_blk), None
 
         init = (dq_acc,
@@ -205,42 +236,47 @@ def _flash_bwd_impl(q, k, v, outs, lses, dout, causal, window, q_chunk,
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
-    return _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk,
-                           q_offset)[0]
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, engine, causal, window, q_chunk, kv_chunk, q_offset):
+    return _flash_fwd_impl(q, k, v, engine, causal, window, q_chunk,
+                           kv_chunk, q_offset)[0]
 
 
-def _flash_fwd_rule(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
-    out, (outs, lses) = _flash_fwd_impl(q, k, v, causal, window, q_chunk,
-                                        kv_chunk, q_offset)
+def _flash_fwd_rule(q, k, v, engine, causal, window, q_chunk, kv_chunk,
+                    q_offset):
+    out, (outs, lses) = _flash_fwd_impl(q, k, v, engine, causal, window,
+                                        q_chunk, kv_chunk, q_offset)
     return out, (q, k, v, outs, lses)
 
 
-def _flash_bwd_rule(causal, window, q_chunk, kv_chunk, q_offset, res, dout):
+def _flash_bwd_rule(engine, causal, window, q_chunk, kv_chunk, q_offset,
+                    res, dout):
     q, k, v, outs, lses = res
-    return _flash_bwd_impl(q, k, v, outs, lses, dout, causal, window,
-                           q_chunk, kv_chunk, q_offset)
+    return _flash_bwd_impl(q, k, v, outs, lses, dout, engine, causal,
+                           window, q_chunk, kv_chunk, q_offset)
 
 
 _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     cur_len: jax.Array, *, window: Optional[int] = None
-                     ) -> jax.Array:
+                     cur_len: jax.Array, *, window: Optional[int] = None,
+                     engine=None) -> jax.Array:
     """Single-position attention against a (B, Lmax, KV, D) cache.
 
     q: (B, 1, H, D); cur_len: () or (B,) — number of valid cache positions
-    INCLUDING the current token (already written at cur_len - 1).
+    INCLUDING the current token (already written at cur_len - 1).  The
+    score and output contractions are (B, KV)-batched dot_generals routed
+    through ``engine`` when given (ozimmu emulation at decode time).
     """
     B, _, H, D = q.shape
     Lmax, KV = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
     G = H // KV
     qg = (q * D ** -0.5).reshape(B, KV, G, D)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
-                   preferred_element_type=jnp.float32)
+    # scores: einsum "bkgd,bskd->bkgs" (contract d)
+    s = _edot(engine, qg, k_cache, (((3,), (3,)), ((0, 1), (0, 2))),
+              out_dtype=jnp.float32)
     pos = jnp.arange(Lmax)
     cur = jnp.asarray(cur_len)
     cur = cur[:, None] if cur.ndim == 1 else cur[None, None]
@@ -249,8 +285,9 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         valid &= pos[None, :] >= cur - window
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
+    # output: einsum "bkgs,bskd->bkgd" (contract s)
+    out = _edot(engine, p.astype(v_cache.dtype), v_cache,
+                (((3,), (1,)), ((0, 1), (0, 2))), out_dtype=jnp.float32)
     return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
 

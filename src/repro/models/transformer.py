@@ -111,7 +111,8 @@ def attn_block(p, cfg: ModelConfig, x, cos, sin, *, cache=None, cur_len=None,
             k = shard(k, "batch", "seq", "heads", "head_dim")
             v = shard(v, "batch", "seq", "heads", "head_dim")
         out = L.attention_flash(q, k, v, causal=True, window=window,
-                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                engine=eng)
     else:
         # The cache is sized min(max_len, window): for windowed attention it
         # is a ring buffer (slot = (pos) mod window); otherwise a plain
@@ -124,7 +125,8 @@ def attn_block(p, cfg: ModelConfig, x, cos, sin, *, cache=None, cur_len=None,
         kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, axis=1)
         vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, axis=1)
         new_cache = (kc, vc)
-        out = L.attention_decode(q, kc, vc, valid_len, window=None)
+        out = L.attention_decode(q, kc, vc, valid_len, window=None,
+                                 engine=eng)
     out = eng(out.reshape(B, Lq, H * hd), p["attn"]["wo"])
     return x + out, new_cache
 

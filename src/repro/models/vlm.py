@@ -95,7 +95,8 @@ def cross_block(p, cfg: ModelConfig, x, memory, *, kv_cache=None):
         k, v = kv_cache
     q = shard(q, "batch", "seq", "heads", "head_dim")
     out = L.attention_flash(q, k, v, causal=False,
-                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                            engine=eng)
     out = eng(out.reshape(B, Lq, H * hd), p["attn"]["wo"])
     x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
     xn2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)

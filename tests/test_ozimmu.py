@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from benchmarks.exact import dd_matmul, max_relative_error
 from repro.core import (VARIANTS, OzimmuConfig, ozimmu_matmul, compute_beta,
