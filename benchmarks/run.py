@@ -1,12 +1,19 @@
 """Benchmark harness entry point: one bench per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--out experiments/bench]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only accuracy,...]
+        [--out experiments/bench] [--summary BENCH_ozimmu.json]
 
 Benches:
   accuracy    Figs. 1/5   — measured error vs k, phi (dd reference)
   breakdown   Figs. 2-3, 6-11 — phase-time shares (v5e model + CPU sanity)
   throughput  Figs. 12-13 — emulated TFLOPS vs n (v5e model)
   pareto      Fig. 14     — measured error vs modeled TFLOPS
+  ozimmu_roofline          — roofline terms of the emulated GEMM (HLO)
+
+Besides the per-bench JSON in ``--out``, the harness writes a top-level
+``BENCH_ozimmu.json`` headline summary (schema documented in
+docs/benchmarks.md) so the perf trajectory of the repo can be tracked
+across PRs from one small committed artifact.
 """
 from __future__ import annotations
 
@@ -16,14 +23,104 @@ import os
 import sys
 import time
 
+SUMMARY_SCHEMA_VERSION = 1
+
+
+def _headline_accuracy(rows):
+    """Max-phi errors at the paper's default k=8 per variant (+ fp64)."""
+    phis = sorted({r["phi"] for r in rows if r["variant"] != "fp64"})
+    ks = sorted({r["k"] for r in rows if r["variant"] != "fp64"})
+    if not phis or not ks:
+        return {}
+    phi = phis[-1]
+    k = 8 if 8 in ks else ks[-1]
+    err = {r["variant"]: r["err"] for r in rows
+           if r["phi"] == phi and r["k"] == k}
+    fp64 = [r["err"] for r in rows
+            if r["phi"] == phi and r["variant"] == "fp64"]
+    return {"phi": phi, "k": k, "err": err,
+            "err_fp64": fp64[0] if fp64 else None}
+
+
+def _headline_breakdown(rows):
+    """Accumulation-time shares and EF/H modeled speedups at one k."""
+    ks = sorted({r["k"] for r in rows})
+    k = 8 if 8 in ks else ks[-1]
+    at_k = [r for r in rows if r["k"] == k]
+    return {
+        "n": at_k[0]["n"], "k": k,
+        "accum_share": {r["variant"]: r["share_accum"] for r in at_k},
+        "speedup_vs_ozimmu": {
+            r["variant"]: r["speedup_vs_ozimmu"] for r in at_k
+            if "speedup_vs_ozimmu" in r},
+    }
+
+
+def _headline_throughput(rows):
+    """Modeled TFLOPS per variant at the largest n, k=8."""
+    ns = sorted({r["n"] for r in rows})
+    ks = sorted({r["k"] for r in rows})
+    n, k = ns[-1], (8 if 8 in ks else ks[-1])
+    tf = {r["variant"]: r["tflops"] for r in rows
+          if r["n"] == n and r["k"] == k}
+    base = tf.get("ozimmu")
+    return {"n": n, "k": k, "tflops": tf,
+            "ef_over_base": (tf.get("ozimmu_ef", 0) / base) if base else None,
+            "h_over_base": (tf.get("ozimmu_h", 0) / base) if base else None}
+
+
+def _headline_pareto(rows):
+    """Fraction of k cells where H Pareto-dominates base (Fig. 14 claim)."""
+    idx = {(r["variant"], r["k"]): r for r in rows}
+    ks = sorted({r["k"] for r in rows})
+    claims = []
+    for k in ks:
+        h, b = idx.get(("ozimmu_h", k)), idx.get(("ozimmu", k))
+        if h and b:
+            claims.append(h["tflops"] >= 1.2 * b["tflops"]
+                          and h["err"] <= 2.0 * b["err"])
+    return {"ks": ks,
+            "h_dominates_base_frac":
+                (sum(claims) / len(claims)) if claims else None}
+
+
+def _headline_roofline(rows):
+    """Roofline-bound emulated TFLOPS per analyzed spec."""
+    return {"n": rows[0]["n"] if rows else None,
+            "emulated_tflops_bound": {
+                r["spec"]: r["emulated_tflops_bound"] for r in rows},
+            "bound": {r["spec"]: r["bound"] for r in rows}}
+
+
+_HEADLINES = {
+    "accuracy": _headline_accuracy,
+    "breakdown": _headline_breakdown,
+    "throughput": _headline_throughput,
+    "pareto": _headline_pareto,
+    "ozimmu_roofline": _headline_roofline,
+}
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced problem sizes / grids (CI smoke)")
+    ap.add_argument("--out", default="experiments/bench",
+                    help="directory for the full per-bench JSON rows")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of bench names")
+    ap.add_argument("--summary", default=None,
+                    help="headline summary path (schema: docs/benchmarks.md)."
+                         " Default: BENCH_ozimmu.json (the committed "
+                         "trajectory artifact) for FULL runs; partial runs "
+                         "(--quick/--only) default to bench_summary.json so "
+                         "they never clobber the committed record. "
+                         "'' disables")
     args = ap.parse_args(argv)
+    if args.summary is None:
+        args.summary = ("BENCH_ozimmu.json"
+                        if not args.quick and not args.only
+                        else "bench_summary.json")
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_accuracy, bench_breakdown,
@@ -39,21 +136,50 @@ def main(argv=None):
         "ozimmu_roofline": lambda out_json=None, quick=False:
             bench_ozimmu_roofline.main(out_json=out_json, quick=True),
     }
+    unknown = (set(args.only.split(",")) - set(benches)) if args.only else ()
+    if unknown:
+        ap.error(f"unknown bench names {sorted(unknown)}; "
+                 f"options: {sorted(benches)}")
     only = set(args.only.split(",")) if args.only else set(benches)
     failures = []
+    summary = {
+        "schema_version": SUMMARY_SCHEMA_VERSION,
+        "generated_unix": int(time.time()),
+        "quick": bool(args.quick),
+        "only": sorted(only),
+        "benches": {},
+    }
     for name, fn in benches.items():
         if name not in only:
             continue
         print(f"\n===== bench: {name} =====")
         t0 = time.time()
         try:
-            fn(out_json=os.path.join(args.out, f"{name}.json"),
-               quick=args.quick)
-            print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+            rows = fn(out_json=os.path.join(args.out, f"{name}.json"),
+                      quick=args.quick)
+            seconds = time.time() - t0
+            try:
+                headline = _HEADLINES[name](rows or [])
+            except Exception as e:  # a bench reshape must not kill the run
+                headline = {"error": f"headline extraction failed: {e!r}"}
+            summary["benches"][name] = {
+                "status": "ok", "seconds": round(seconds, 2),
+                "headline": headline,
+            }
+            print(f"===== {name} done in {seconds:.1f}s =====")
         except Exception as e:
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
+            summary["benches"][name] = {
+                "status": "failed", "seconds": round(time.time() - t0, 2),
+                "error": repr(e),
+            }
+    if args.summary:
+        with open(args.summary, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"\nheadline summary -> {args.summary}")
     if failures:
         print("\nFAILED benches:", failures)
         sys.exit(1)

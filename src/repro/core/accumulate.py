@@ -26,10 +26,27 @@ High-precision accumulator modes:
     converted to an exact (hi, lo) f32 pair, scaled by powers of two
     (exact), and accumulated with Knuth TwoSum.  This is our beyond-paper
     replacement for FP64 accumulation on hardware without FP64 units.
+
+Return contract (the distributed hooks):
+
+Both matmuls take two optional hooks for mesh-sharded contractions
+(see repro/distributed/collectives.py and docs/distributed.md):
+
+  * ``product_reduce`` — applied ONCE to the stacked ``(G, *batch, m, p)``
+    INT32 tensor of every slice/group product *before* any conversion or
+    scaling.  With an exact int32 ``psum`` over the mesh axis this makes a
+    contraction-sharded evaluation bit-identical to the unsharded one
+    (integer addition is associative; the overflow bound is the global-n
+    bound).  Identity when None.
+  * ``partial=True`` — return the UNROUNDED accumulator instead of an
+    array in ``out_dtype``: a :class:`DF32` (hi, lo) pair for
+    ``accum="df32"``, the raw f64/f32 accumulator otherwise.  The caller
+    owns the single final rounding — e.g. after an error-free cross-device
+    reduction of per-shard partials.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -142,38 +159,60 @@ def num_highprec_adds(k: int, r: int, group_ef: bool) -> int:
 # Alg. 4 — naive accumulation
 # ---------------------------------------------------------------------------
 
+def _reduce_products(prods, product_reduce: Optional[Callable]):
+    """Apply ``product_reduce`` once to the stacked INT32 products.
+
+    Stacking turns the per-product reductions into ONE collective for the
+    whole GEMM; without a hook the list passes through untouched (no stack
+    materialized on the default path).
+    """
+    if product_reduce is None:
+        return prods
+    reduced = product_reduce(jnp.stack(prods))
+    if reduced.dtype != jnp.int32:
+        raise TypeError(f"product_reduce must preserve int32 exactness, "
+                        f"returned {reduced.dtype}")
+    return [reduced[i] for i in range(len(prods))]
+
+
 def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
-                 out_dtype=None) -> jax.Array:
+                 out_dtype=None, partial: bool = False,
+                 product_reduce: Optional[Callable] = None
+                 ) -> Union[jax.Array, DF32]:
     """One INT8 GEMM + one high-precision scaled add per slice pair.
 
     Batched: digits may be ``(k, *batch, m, n)`` / ``(k, *batch, n, p)``;
     every slice-pair product is then ONE batched int8 ``dot_general``.
+    ``partial`` / ``product_reduce``: see the module docstring.
     """
     assert sa.axis == 0 and sb.axis == 1, "A needs row scales, B column scales"
     k = sa.digits.shape[0]
     assert sb.digits.shape[0] == k
     out_shape = sa.digits.shape[1:-1] + (sb.digits.shape[-1],)
     out_dtype = out_dtype or sa.scale.dtype
+    pairs = _term_pairs(k)
+    prods = _reduce_products(
+        [int8_gemm(sa.digits[s - 1], sb.digits[t - 1]) for s, t in pairs],
+        product_reduce)
 
     if accum == "df32":
         acc = df32_zero(out_shape)
-        for s, t in _term_pairs(k):
-            prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1])
+        for (s, t), prod in zip(pairs, prods):
             term = int32_to_df32(prod)
             scale_a = sa.scale[s - 1].astype(jnp.float32)
             scale_b = sb.scale[t - 1].astype(jnp.float32)
             term = DF32(_outer_scale(term.hi, scale_a, scale_b),
                         _outer_scale(term.lo, scale_a, scale_b))
             acc = df32_add_df(acc, term)
-        return acc.to_float(out_dtype)
+        return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
     c = jnp.zeros(out_shape, acc_dtype)
-    for s, t in _term_pairs(k):
-        prod = int8_gemm(sa.digits[s - 1], sb.digits[t - 1]).astype(acc_dtype)
-        c = c + _outer_scale(prod, sa.scale[s - 1].astype(acc_dtype),
+    for (s, t), prod in zip(pairs, prods):
+        c = c + _outer_scale(prod.astype(acc_dtype),
+                             sa.scale[s - 1].astype(acc_dtype),
                              sb.scale[t - 1].astype(acc_dtype))
-    return c.astype(out_dtype)
+    return c if partial else c.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -199,11 +238,17 @@ def group_gemm_concat(sa: Split, sb: Split, pairs) -> jax.Array:
 
 def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
                     out_dtype=None, r: Optional[int] = None,
-                    group_gemm_fn=None) -> jax.Array:
+                    group_gemm_fn=None, partial: bool = False,
+                    product_reduce: Optional[Callable] = None
+                    ) -> Union[jax.Array, DF32]:
     """Group-wise error-free accumulation (Alg. 6; Alg. 7 when r >= k).
 
     Requires geometric slice scales (``base`` present): the combined scale of
     every pair in group g is ``baseA (x) baseB * 2^(-beta*g)``.
+    ``partial`` / ``product_reduce``: see the module docstring — when the
+    contraction axis is sharded, pass ``r`` computed from the GLOBAL
+    contraction length so the per-group INT32 partials stay summable
+    without overflow across devices.
     """
     assert sa.axis == 0 and sb.axis == 1
     if sa.base is None or sb.base is None:
@@ -217,26 +262,27 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
     if r is None:
         r = compute_r(n, beta)
     gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
+    chunks = list(_group_chunks(k, r))
+    prods = _reduce_products([gg(pairs) for _, pairs in chunks],
+                             product_reduce)
 
     if accum == "df32":
         acc = df32_zero(out_shape)
         base_a = sa.base.astype(jnp.float32)
         base_b = sb.base.astype(jnp.float32)
-        for g, pairs in _group_chunks(k, r):
-            prod = gg(pairs)
+        for (g, _), prod in zip(chunks, prods):
             e = jnp.asarray(2.0 ** (-beta * g), jnp.float32)
             term = int32_to_df32(prod)
             term = DF32(_outer_scale(term.hi, base_a, base_b) * e,
                         _outer_scale(term.lo, base_a, base_b) * e)
             acc = df32_add_df(acc, term)
-        return acc.to_float(out_dtype)
+        return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
     c = jnp.zeros(out_shape, acc_dtype)
     base_a = sa.base.astype(acc_dtype)
     base_b = sb.base.astype(acc_dtype)
-    for g, pairs in _group_chunks(k, r):
-        prod = gg(pairs).astype(acc_dtype)
+    for (g, _), prod in zip(chunks, prods):
         e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
-        c = c + _outer_scale(prod, base_a, base_b) * e
-    return c.astype(out_dtype)
+        c = c + _outer_scale(prod.astype(acc_dtype), base_a, base_b) * e
+    return c if partial else c.astype(out_dtype)

@@ -5,7 +5,13 @@ Specs (CLI flag ``--matmul_engine``):
 
   * ``bf16`` / ``f32`` / ``f64``      — native XLA dot in that compute dtype
   * ``ozimmu[-k]``, ``ozimmu_rn[-k]``, ``ozimmu_ef[-k]``, ``ozimmu_h[-k]``
-    optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper).
+    optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper)
+  * ``...@mesh_axis[/int32|/df32]``   — mesh-native sharded emulation: the
+    contraction axis is sharded over the named mesh axis and the
+    cross-device accumulation stays inside the scheme's exactness
+    invariants (error-free int32 product psum by default, compensated
+    df32 partial-accumulator reduction with ``/df32``) — see
+    docs/distributed.md.  Ignored gracefully when no mesh is installed.
 
 The engine is a small immutable object passed through model configs.  Two
 entry points:
@@ -48,11 +54,19 @@ class MatmulEngine:
 
     @property
     def is_ozimmu(self) -> bool:
-        return self.spec.split("-")[0].split(":")[0] not in _NATIVE
+        return self.spec.split("@")[0].split("-")[0].split(":")[0] \
+            not in _NATIVE
 
     @property
     def ozimmu_config(self) -> Optional[ozimmu.OzimmuConfig]:
         return ozimmu.parse_spec(self.spec) if self.is_ozimmu else None
+
+    def local(self) -> "MatmulEngine":
+        """This engine without the ``@mesh_axis`` suffix — single-device
+        semantics, for use inside shard_map bodies (e.g. the all-to-all MoE
+        dispatch) that already own the mesh axes."""
+        return MatmulEngine(self.spec.split("@")[0]) if "@" in self.spec \
+            else self
 
     def dot_general(self, lhs: jax.Array, rhs: jax.Array, dimension_numbers,
                     out_dtype=None) -> jax.Array:
@@ -90,4 +104,7 @@ def make_engine(spec: str) -> MatmulEngine:
     eng = MatmulEngine(spec)
     if eng.is_ozimmu:
         ozimmu.parse_spec(spec)  # validate eagerly
+    elif spec not in _NATIVE:
+        # a native dtype with ozimmu-only decorations, e.g. "bf16@model"
+        raise ValueError(f"native engine specs take no suffixes: {spec!r}")
     return eng

@@ -25,12 +25,23 @@ numbers: the cotangent contractions run through the same emulation),
 jit/vmap/shard-compatible (everything is plain lax), and support f64
 (paper-faithful DGEMM emulation) and f32 inputs with ``f64``/``f32``/``df32``
 accumulators.
+
+Mesh-native mode (``OzimmuConfig.mesh_axis`` / spec suffix ``@model``):
+when a mesh is installed and the contraction length divides the named
+axis, the contraction runs sharded under ``shard_map`` with the
+cross-device accumulation kept inside the scheme — an exact INT32
+product ``psum`` (bit-identical to the unsharded emulation) or, with
+``mesh_reduce="df32"``, a TwoSum-compensated reduction of the partial
+accumulators with one final rounding.  See docs/distributed.md.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from functools import partial
+from functools import partial as partial_fn  # alias: `partial` is also a
+                                             # keyword arg of _bmm_local
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -52,9 +63,18 @@ class OzimmuConfig:
     accumulate: str = "group_ef"    # naive | group_ef
     accum_dtype: str = "f64"        # f64 | f32 | df32
     use_pallas: bool = False        # route group GEMMs through the Pallas kernel
+    mesh_axis: Optional[str] = None  # mesh-native contraction sharding axis
+    mesh_reduce: str = "int32"      # int32 (exact product psum) | df32
+                                    # (compensated partial-accumulator psum)
 
     def with_(self, **kw) -> "OzimmuConfig":
         return dataclasses.replace(self, **kw)
+
+    def local(self) -> "OzimmuConfig":
+        """This config without the mesh-native reduction (single-device
+        semantics; used inside shard_map bodies that already own the mesh
+        axes — nested shard_maps are not a thing)."""
+        return self.with_(mesh_axis=None) if self.mesh_axis else self
 
 
 VARIANTS = {
@@ -71,30 +91,161 @@ _SPLITTERS = {
 }
 
 
+_MESH_REDUCES = ("int32", "df32")
+
+
 def parse_spec(spec: str) -> OzimmuConfig:
-    """Parse ``"ozimmu_h-8"`` / ``"ozimmu_ef-10:df32"`` style strings."""
+    """Parse ``"ozimmu_h-8"`` / ``"ozimmu_ef-10:df32"`` style strings.
+
+    Full grammar (docs/engine.md):
+    ``variant["-"k][":"accum]["@"mesh_axis["/"mesh_reduce]]`` — e.g.
+    ``"ozimmu_h-8:df32@model"`` runs contraction-sharded over the ``model``
+    mesh axis with the exact int32 cross-device reduction, and
+    ``"...@model/df32"`` selects the compensated partial-accumulator
+    reduction instead (see docs/distributed.md).
+    """
+    mesh_axis, mesh_reduce = None, "int32"
+    if "@" in spec:
+        spec, mesh = spec.split("@", 1)
+        mesh_axis, _, reduce_str = mesh.partition("/")
+        if reduce_str:
+            mesh_reduce = reduce_str
+        if not mesh_axis or not mesh_axis.isidentifier():
+            raise ValueError(f"bad mesh axis {mesh_axis!r} in engine spec")
+        if mesh_reduce not in _MESH_REDUCES:
+            raise ValueError(f"unknown mesh reduce {mesh_reduce!r}; "
+                             f"options: {_MESH_REDUCES}")
     accum_dtype = "f64"
     if ":" in spec:
-        spec, accum_dtype = spec.split(":")
+        spec, _, accum_dtype = spec.partition(":")
+        if accum_dtype not in ("f64", "f32", "df32"):
+            raise ValueError(f"unknown accumulator dtype {accum_dtype!r}; "
+                             f"options: f64, f32, df32")
     name, _, kstr = spec.partition("-")
     if name not in VARIANTS:
         raise ValueError(f"unknown ozimmu variant {name!r}; "
                          f"options: {sorted(VARIANTS)}")
+    if kstr and (not kstr.isdigit() or int(kstr) < 1):
+        raise ValueError(f"bad slice count {kstr!r} in engine spec")
     cfg = VARIANTS[name]
-    return cfg.with_(k=int(kstr) if kstr else cfg.k, accum_dtype=accum_dtype)
+    return cfg.with_(k=int(kstr) if kstr else cfg.k, accum_dtype=accum_dtype,
+                     mesh_axis=mesh_axis, mesh_reduce=mesh_reduce)
 
 
-def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig):
+def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
+                   n_total: Optional[int] = None, rowmax_reduce=None):
     """Step (i)+(ii): slice A row-wise and B column-wise.
 
     a (*batch, m, n), b (*batch, n, p) — scales are per batch element.
+    ``n_total`` overrides the contraction length used for beta (eq. 4) when
+    ``a``/``b`` are per-device shards of a longer contraction;
+    ``rowmax_reduce`` (e.g. a mesh-axis ``pmax``) then makes the digit
+    grids globally agreed — see docs/distributed.md.
     """
-    n = a.shape[-1]
+    n = n_total if n_total is not None else a.shape[-1]
     beta = splitting.compute_beta(n)
     splitter = _SPLITTERS[cfg.split]
-    sa = splitter(a, cfg.k, beta=beta, axis=0)
-    sb = splitter(b, cfg.k, beta=beta, axis=1)
+    sa = splitter(a, cfg.k, beta=beta, axis=0, rowmax_reduce=rowmax_reduce)
+    sb = splitter(b, cfg.k, beta=beta, axis=1, rowmax_reduce=rowmax_reduce)
     return sa, sb
+
+
+def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
+               n_total: Optional[int] = None, rowmax_reduce=None,
+               product_reduce=None, partial: bool = False):
+    """Single-device emulated batched matmul (the shard-local body of the
+    mesh-native path when the distributed hooks are given)."""
+    sa, sb = split_operands(a, b, cfg, n_total=n_total,
+                            rowmax_reduce=rowmax_reduce)
+    group_gemm_fn = None
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops  # lazy: kernels are optional
+        group_gemm_fn = partial_fn(kops.group_gemm, sa, sb)
+    if cfg.accumulate == "naive":
+        return accumulate.matmul_naive(
+            sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
+            partial=partial, product_reduce=product_reduce)
+    n = n_total if n_total is not None else a.shape[-1]
+    r = splitting.compute_r(n, sa.beta)
+    return accumulate.matmul_group_ef(
+        sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype, r=r,
+        group_gemm_fn=group_gemm_fn, partial=partial,
+        product_reduce=product_reduce)
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
+                out_dtype) -> "callable":
+    """The jitted shard_map callable for one (config, mesh, rank) cell.
+
+    Cached so repeated *eager* mesh-native contractions reuse one
+    compiled entry instead of re-wrapping a fresh closure in ``jax.jit``
+    per call (which would defeat jit's own cache); the jit is needed at
+    all because eager shard_map is NotImplemented for some collective/dot
+    patterns on older JAX.  Inside an outer jit it inlines for free.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import collectives, compat
+
+    axis = cfg.mesh_axis
+    in_specs = (P(*((None,) * (nb + 1) + (axis,))),
+                P(*((None,) * nb + (axis, None))))
+    out_specs = P(*((None,) * (nb + 2)))
+    local_cfg = cfg.local()
+
+    if cfg.mesh_reduce == "int32":
+        def body(al, bl):
+            return _bmm_local(
+                al, bl, local_cfg, n_total=n_total,
+                rowmax_reduce=lambda v: collectives.pmax_scales(v, axis),
+                product_reduce=lambda p: collectives.psum_exact_int32(
+                    p, axis))
+    else:
+        def body(al, bl):
+            part = _bmm_local(al, bl, local_cfg, n_total=n_total,
+                              partial=True)
+            if isinstance(part, accumulate.DF32):
+                return collectives.psum_df32(part, axis).to_float(out_dtype)
+            return collectives.psum_compensated(part, axis).astype(out_dtype)
+
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, axis_names={axis},
+                                    check_vma=False))
+
+
+def _bmm_sharded(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
+                 mesh) -> jax.Array:
+    """Mesh-native emulated batched matmul: contraction axis sharded over
+    ``cfg.mesh_axis``, cross-device accumulation inside the scheme.
+
+    Strategy ``int32`` (default): row/col maxima are agreed across shards
+    (one ``pmax``), every INT32 slice/group product is summed exactly over
+    the axis (one stacked ``psum``), and the high-precision accumulation
+    runs on the already-global products — bit-identical to the unsharded
+    emulation.  Strategy ``df32``: each shard accumulates its local partial
+    (local scales, no pmax pre-pass), and the partial accumulators are
+    merged with a TwoSum-compensated reduction — one all-gather for the
+    whole GEMM, error-free in the two-float representation, with the single
+    final rounding after the merge.
+    """
+    return _sharded_fn(cfg, mesh, a.ndim - 2, a.shape[-1], a.dtype)(a, b)
+
+
+def _mesh_for(cfg: OzimmuConfig, n: int):
+    """The installed mesh if the mesh-native path applies, else None
+    (mesh absent, axis missing or trivial, or contraction indivisible —
+    the caller falls back to the single-device emulation under GSPMD)."""
+    if cfg.mesh_axis is None:
+        return None
+    from repro.distributed import compat
+    mesh = compat.get_abstract_mesh()
+    if mesh.empty or cfg.mesh_axis not in mesh.axis_names:
+        return None
+    size = dict(mesh.shape)[cfg.mesh_axis]
+    if size <= 1 or n % size != 0:
+        return None
+    return mesh
 
 
 def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
@@ -108,17 +259,10 @@ def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
         # explicitly (the documented footgun — see docs/engine.md) instead
         # of emitting one truncation warning per accumulation step
         cfg = cfg.with_(accum_dtype="f32")
-    sa, sb = split_operands(a, b, cfg)
-    group_gemm_fn = None
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops  # lazy: kernels are optional
-        group_gemm_fn = partial(kops.group_gemm, sa, sb)
-    if cfg.accumulate == "naive":
-        return accumulate.matmul_naive(
-            sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype)
-    return accumulate.matmul_group_ef(
-        sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
-        group_gemm_fn=group_gemm_fn)
+    mesh = _mesh_for(cfg, a.shape[-1])
+    if mesh is not None:
+        return _bmm_sharded(a, b, cfg, mesh)
+    return _bmm_local(a, b, cfg.local())
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,7 @@ exponent computation "occasionally returns erroneous results").
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -146,7 +146,8 @@ def _geo_scales(base: jax.Array, beta: int, k: int) -> jax.Array:
 
 
 def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
-                  axis: int = 0) -> Split:
+                  axis: int = 0,
+                  rowmax_reduce: Optional[Callable] = None) -> Split:
     """Alg. 3 — bit-mask splitting, expressed in pure float arithmetic.
 
     Equivalent to masking consecutive beta-bit groups of the sign-magnitude
@@ -156,13 +157,21 @@ def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
 
     Accepts leading batch dimensions: ``a`` is ``(*batch, m, n)`` and every
     row/column scale is computed per batch element.
+
+    ``rowmax_reduce`` widens every row/col |a| maximum before scales are
+    derived from it (e.g. ``lax.pmax`` over a mesh axis when the
+    contraction dimension is sharded, so all shards agree on one digit
+    grid).  Must be monotone and exact (max of maxima); identity when None.
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
     dt = a.dtype
     two_beta = jnp.asarray(2.0 ** beta, dt)
 
-    base = 2.0 * _pow2_floor(_rowmax(a, axis))          # scale[s] = base * 2^(-beta*s)
+    rowmax = _rowmax(a, axis)
+    if rowmax_reduce is not None:
+        rowmax = rowmax_reduce(rowmax)
+    base = 2.0 * _pow2_floor(rowmax)                    # scale[s] = base * 2^(-beta*s)
     r = a * _bcast(1.0 / base, axis)                    # exact: base is a power of two
     digits = []
     for _ in range(k):
@@ -195,7 +204,8 @@ def _rn_extract(r: jax.Array, grid: jax.Array, axis: int):
 
 
 def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
-             axis: int = 0) -> Split:
+             axis: int = 0,
+             rowmax_reduce: Optional[Callable] = None) -> Split:
     """Alg. 5 — round-to-nearest splitting with per-slice adaptive rescaling.
 
     Each slice rounds the residual to the nearest multiple of
@@ -204,6 +214,10 @@ def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
     (``base is None``), so only naive accumulation (Alg. 4) applies — this is
     the "ozIMMU_RN" configuration of the paper.  Batched like
     :func:`split_bitmask`.
+
+    ``rowmax_reduce`` applies per slice (the adaptive grid depends on the
+    *residual's* row maxima, which must be agreed on globally every
+    extraction step when the contraction axis is sharded).
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
@@ -213,7 +227,10 @@ def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
     r = a
     digits, scales = [], []
     for _ in range(k):
-        grid = _pow2_ceil(_rowmax(r, axis)) * grid_factor
+        rowmax = _rowmax(r, axis)
+        if rowmax_reduce is not None:
+            rowmax = rowmax_reduce(rowmax)
+        grid = _pow2_ceil(rowmax) * grid_factor
         s, r = _rn_extract(r, grid, axis)
         d = s * _bcast(1.0 / grid, axis)                # exact integer in [-64, 64]
         digits.append(d.astype(jnp.int8))
@@ -222,21 +239,27 @@ def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
 
 
 def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
-                   axis: int = 0) -> Split:
+                   axis: int = 0,
+                   rowmax_reduce: Optional[Callable] = None) -> Split:
     """Alg. 8 — round-to-nearest splitting with constant grid ratio 2^-beta.
 
     The base scale ``mu = 2^ceil(log2 rowmax) * 2^(1-beta)`` is computed once
     (one pass over the matrix instead of k); slice s rounds the residual to
     grid ``mu * 2^(-beta*(s-1))``.  Slice scales form the geometric sequence
     required by group-wise error-free accumulation — the "ozIMMU_H" splitting.
-    Batched like :func:`split_bitmask`.
+    Batched like :func:`split_bitmask`; ``rowmax_reduce`` as there (one
+    reduction — the single rowmax pass is this splitting's selling point,
+    and it stays a single collective when sharded).
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
     dt = a.dtype
     two_beta = jnp.asarray(2.0 ** beta, dt)
 
-    mu = _pow2_ceil(_rowmax(a, axis)) * (2.0 ** (1 - beta))
+    rowmax = _rowmax(a, axis)
+    if rowmax_reduce is not None:
+        rowmax = rowmax_reduce(rowmax)
+    mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
     r = a
     grid = mu
     digits = []

@@ -1,0 +1,141 @@
+"""JAX mesh/shard_map API shims — one import site for both API generations.
+
+The distributed layer targets the modern mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.shard_map`` with ``axis_names`` /
+``check_vma``; JAX >= 0.6).  Older runtimes (the 0.4.x line this container
+ships) expose the same machinery under different names:
+
+  ===========================  ==========================================
+  modern                       0.4.x equivalent
+  ===========================  ==========================================
+  ``jax.set_mesh(m)``          ``with m:`` + ``mesh_lib.set_abstract_mesh``
+  ``sharding.get_abstract_mesh``  ``jax._src.mesh.get_abstract_mesh`` (may
+                               return ``()`` when nothing is installed)
+  ``jax.shard_map``            ``jax.experimental.shard_map.shard_map``
+                               (``check_rep``/``auto`` instead of
+                               ``check_vma``/``axis_names``)
+  ===========================  ==========================================
+
+Everything in repro that touches a mesh goes through this module, so model
+and launch code reads as if the modern API were always present.  The shims
+resolve at call time (not import time) and are no-ops on modern JAX.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+try:  # modern JAX keeps AbstractMesh here; 0.4.x under jax._src.mesh
+    from jax._src import mesh as _mesh_lib
+except ImportError:  # pragma: no cover - very old/strange builds
+    _mesh_lib = None
+
+__all__ = ["EMPTY_MESH", "get_abstract_mesh", "get_concrete_mesh",
+           "set_mesh", "shard_map"]
+
+
+class _EmptyMesh:
+    """Stand-in with the AbstractMesh surface used by repro code."""
+
+    empty = True
+    axis_names = ()
+    shape = {}
+
+    def __repr__(self):
+        return "EmptyMesh()"
+
+
+EMPTY_MESH = _EmptyMesh()
+
+
+def get_abstract_mesh():
+    """The abstract mesh installed by :func:`set_mesh`.
+
+    Always returns an object with ``.empty`` / ``.axis_names`` / ``.shape``
+    (``EMPTY_MESH`` outside any mesh context), so call sites never branch on
+    the JAX version or on ``None``.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None and _mesh_lib is not None:
+        getter = getattr(_mesh_lib, "get_abstract_mesh", None)
+    if getter is None:
+        return EMPTY_MESH
+    mesh = getter()
+    # 0.4.x returns () (the raw thread-local default) when nothing is set
+    if mesh is None or not hasattr(mesh, "empty"):
+        return EMPTY_MESH
+    return mesh
+
+
+def get_concrete_mesh() -> Optional[jax.sharding.Mesh]:
+    """The physical mesh installed by :func:`set_mesh`, or None."""
+    getter = getattr(jax.sharding, "get_concrete_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        return None if mesh is None or getattr(mesh, "empty", False) else mesh
+    if _mesh_lib is not None:
+        env = _mesh_lib.thread_resources.env.physical_mesh
+        return None if env.empty else env
+    return None
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Install ``mesh`` as both the physical and the abstract mesh.
+
+    Modern JAX: delegates to ``jax.set_mesh``.  0.4.x: enters the plain
+    ``with mesh:`` context (what ``with_sharding_constraint`` and
+    ``shard_map`` read) AND sets the abstract mesh (what ``shard()`` and
+    the engine's mesh-native path read) — ``with mesh:`` alone does not.
+    """
+    modern = getattr(jax, "set_mesh", None)
+    if modern is not None:
+        with modern(mesh):
+            yield mesh
+        return
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(mesh)
+        if _mesh_lib is not None and hasattr(_mesh_lib, "set_abstract_mesh"):
+            stack.enter_context(
+                _mesh_lib.set_abstract_mesh(mesh.abstract_mesh))
+        yield mesh
+
+
+def _resolve_mesh(mesh):
+    """shard_map on 0.4.x needs a concrete Mesh; accept abstract ones."""
+    if mesh is None or (_mesh_lib is not None
+                        and isinstance(mesh, _mesh_lib.AbstractMesh)):
+        concrete = get_concrete_mesh()
+        if concrete is None:
+            raise ValueError(
+                "shard_map needs a mesh: none passed and none installed "
+                "(use repro.distributed.compat.set_mesh)")
+        return concrete
+    return mesh
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, axis_names=None,
+              check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on every JAX version.
+
+    ``axis_names`` — the mesh axes the body is manual over (all of them
+    when None); on 0.4.x this maps to the complementary ``auto`` set.
+    ``check_vma`` maps to 0.4.x's ``check_rep``.
+    """
+    modern = getattr(jax, "shard_map", None)
+    if modern is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return modern(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+    mesh = _resolve_mesh(mesh)
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(set(mesh.axis_names) - set(axis_names))
+    return _legacy(f, **kwargs)

@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs, optim
 from repro.configs import SHAPES
+from repro.distributed import compat
 from repro.distributed.sharding import spec_tree, use_rules
 from repro.launch import hlo_cost, roofline, steps
 from repro.launch.mesh import make_production_mesh, mesh_rules
@@ -87,7 +88,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, engine: str = "bf16",
     model = api.get_model(cfg)
     t0 = time.time()
 
-    with jax.set_mesh(mesh), use_rules(rules):
+    with compat.set_mesh(mesh), use_rules(rules):
         pshapes, axes = steps.params_shapes(cfg)
         n_params = roofline.count_params(pshapes)
         p_spec = spec_tree(axes, rules)

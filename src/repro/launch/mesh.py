@@ -26,6 +26,42 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh_spec(spec: Optional[str]):
+    """CLI mesh grammar: ``"data=2,model=4"`` (ordered ``axis=size`` pairs)
+    or the named presets ``"single_pod"`` / ``"multi_pod"``; ``None`` / ""
+    -> no mesh (single device).
+
+    Axis names must be mesh-rule axes the rest of the stack knows
+    ("pod", "data", "model"); sizes must multiply to at most the available
+    device count.  Returns a Mesh or None.
+    """
+    if not spec:
+        return None
+    if spec == "single_pod":
+        return make_production_mesh()
+    if spec == "multi_pod":
+        return make_production_mesh(multi_pod=True)
+    axes, sizes = [], []
+    for part in spec.split(","):
+        name, _, size = part.partition("=")
+        name, size = name.strip(), size.strip()
+        if name not in ("pod", "data", "model") or not size.isdigit() \
+                or int(size) < 1 or name in axes:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected unique 'axis=size' pairs "
+                f"with axes from pod/data/model and size >= 1, got {part!r}")
+        axes.append(name)
+        sizes.append(int(size))
+    ndev = len(jax.devices())
+    total = 1
+    for s in sizes:
+        total *= s
+    if total > ndev:
+        raise ValueError(f"mesh spec {spec!r} needs {total} devices, "
+                         f"only {ndev} available")
+    return jax.make_mesh(tuple(sizes), tuple(axes))
+
+
 def mesh_rules(mesh, arch: Optional[str] = None):
     """Pick the logical->mesh rule table for a mesh (+ per-arch overrides)."""
     from repro.distributed.sharding import MULTI_POD_RULES, SINGLE_POD_RULES

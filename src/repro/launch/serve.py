@@ -21,7 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.distributed import compat
+from repro.distributed.sharding import use_rules
 from repro.launch import steps as S
+from repro.launch.mesh import mesh_rules, parse_mesh_spec
 from repro.models import api
 
 
@@ -72,27 +75,40 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--engine", "--matmul_engine", dest="engine",
+                    default="bf16",
+                    help="matmul engine spec, e.g. bf16 or "
+                         "ozimmu_h-8:df32@model (docs/engine.md)")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec: 'data=2,model=4', 'single_pod', "
+                         "'multi_pod'; default no mesh (single device)")
     args = ap.parse_args(argv)
 
-    cfg = configs.get_config(args.arch, smoke=True)
-    model = api.get_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0), cfg)
-    ctx = None
-    if cfg.family == "vlm":
-        ctx = jnp.zeros((args.batch, cfg.vision_seq, cfg.d_model),
-                        jnp.float32)
-    if cfg.family == "encdec":
-        from repro.models import encdec
-        frames = jnp.zeros((args.batch, args.prompt_len, cfg.d_model),
-                           jnp.float32)
-        ctx = encdec.encode(params, cfg, frames)
-    server = Server(cfg, params, max_len=args.max_len, batch=args.batch)
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len,
-                            dtype=np.int32) for _ in range(args.batch)]
-    t0 = time.time()
-    outs = server.generate(prompts, gen_tokens=args.gen, ctx=ctx)
-    dt = time.time() - t0
+    mesh = parse_mesh_spec(args.mesh)
+    rules = mesh_rules(mesh, args.arch) if mesh is not None else None
+    import contextlib
+    mesh_ctx = (compat.set_mesh(mesh) if mesh is not None
+                else contextlib.nullcontext())
+    cfg = configs.get_config(args.arch, smoke=True, engine_spec=args.engine)
+    with mesh_ctx, use_rules(rules):
+        model = api.get_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0), cfg)
+        ctx = None
+        if cfg.family == "vlm":
+            ctx = jnp.zeros((args.batch, cfg.vision_seq, cfg.d_model),
+                            jnp.float32)
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            frames = jnp.zeros((args.batch, args.prompt_len, cfg.d_model),
+                               jnp.float32)
+            ctx = encdec.encode(params, cfg, frames)
+        server = Server(cfg, params, max_len=args.max_len, batch=args.batch)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len,
+                                dtype=np.int32) for _ in range(args.batch)]
+        t0 = time.time()
+        outs = server.generate(prompts, gen_tokens=args.gen, ctx=ctx)
+        dt = time.time() - t0
     total_new = args.gen * args.batch
     print(f"[serve] {args.arch}: {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s, batch={args.batch})")

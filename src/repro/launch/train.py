@@ -24,9 +24,10 @@ import numpy as np
 from repro import configs, optim
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, Pipeline
+from repro.distributed import compat
 from repro.distributed.sharding import use_rules
 from repro.launch import steps as S
-from repro.launch.mesh import mesh_rules
+from repro.launch.mesh import mesh_rules, parse_mesh_spec
 from repro.models import api
 
 
@@ -54,7 +55,7 @@ def train(arch: str, *, smoke: bool = True, n_steps: int = 100,
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
 
     import contextlib
-    mesh_ctx = (jax.set_mesh(mesh) if mesh is not None
+    mesh_ctx = (compat.set_mesh(mesh) if mesh is not None
                 else contextlib.nullcontext())
     with mesh_ctx, use_rules(rules):
         rng = jax.random.PRNGKey(seed)
@@ -101,7 +102,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--engine", default="bf16")
+    ap.add_argument("--engine", "--matmul_engine", dest="engine",
+                    default="bf16",
+                    help="matmul engine spec, e.g. bf16 or "
+                         "ozimmu_h-8:df32@model (docs/engine.md)")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec: 'data=2,model=4', 'single_pod', "
+                         "'multi_pod'; default no mesh (single device)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -110,6 +117,7 @@ def main(argv=None):
                       global_batch=args.batch, seq_len=args.seq,
                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                       microbatches=args.microbatches, engine=args.engine,
+                      mesh=parse_mesh_spec(args.mesh),
                       lr=args.lr)
     k = max(1, len(losses) // 10)
     print(f"[train] first-{k} mean loss {np.mean(losses[:k]):.4f}  "

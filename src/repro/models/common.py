@@ -13,7 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import MatmulEngine
+from repro.core.engine import MatmulEngine, make_engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +92,10 @@ class ModelConfig:
 
     @property
     def engine(self) -> MatmulEngine:
-        return MatmulEngine(self.engine_spec)
+        # make_engine, not the bare constructor: a bad spec (typo'd k,
+        # "bf16@model", ...) must fail at config time with a ValueError,
+        # not as a KeyError deep inside the first traced contraction
+        return make_engine(self.engine_spec)
 
     def with_(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

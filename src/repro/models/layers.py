@@ -296,12 +296,19 @@ def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 # ---------------------------------------------------------------------------
 
 def swiglu(x, w_gate, w_up, w_down, engine):
+    # layout hints for GSPMD only: "embed"/"mlp" are unsharded in the
+    # default rules, and the mesh-native engine path triggers on mesh
+    # presence + contraction divisibility, never on these annotations —
+    # they exist so per-arch rule overrides CAN place the activations
+    # without resharding churn around the engine's shard_map boundary
+    x = shard(x, "batch", "seq", "embed")
     h = jax.nn.silu(engine(x, w_gate)) * engine(x, w_up)
     h = shard(h, "batch", "seq", "mlp")
     return engine(h, w_down)
 
 
 def gelu_mlp(x, w_up, w_down, engine):
+    x = shard(x, "batch", "seq", "embed")
     h = jax.nn.gelu(engine(x, w_up))
     h = shard(h, "batch", "seq", "mlp")
     return engine(h, w_down)
@@ -314,5 +321,6 @@ def embed_tokens(tokens: jax.Array, emb: jax.Array, dtype) -> jax.Array:
 
 def logits_head(x: jax.Array, emb_or_w: jax.Array, engine) -> jax.Array:
     """x (B, L, d) @ W (d, vocab) -> f32 logits, vocab-sharded."""
+    x = shard(x, "batch", "seq", "embed")
     out = engine(x, emb_or_w).astype(jnp.float32)
     return shard(out, "batch", "seq", "vocab")

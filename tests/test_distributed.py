@@ -17,11 +17,13 @@ import pytest
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_sub(code: str, timeout=900):
+def run_sub(code: str, timeout=900, x64=False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = _SRC
     env.pop("JAX_ENABLE_X64", None)
+    if x64:  # must be set before jax initializes in the subprocess
+        env["JAX_ENABLE_X64"] = "true"
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=timeout,
                        env=env)
@@ -36,6 +38,7 @@ def test_sharded_train_step_matches_single_device():
         from repro.launch import steps as S
         from repro.launch.mesh import make_test_mesh, mesh_rules
         from repro.distributed.sharding import use_rules
+        from repro.distributed.compat import set_mesh
 
         arch = "internlm2_1_8b"
         cfg = configs.get_config(arch, smoke=True)
@@ -48,7 +51,7 @@ def test_sharded_train_step_matches_single_device():
         def run(mesh):
             rules = mesh_rules(mesh, arch) if mesh else None
             import contextlib
-            ctx = jax.set_mesh(mesh) if mesh else contextlib.nullcontext()
+            ctx = set_mesh(mesh) if mesh else contextlib.nullcontext()
             with ctx, use_rules(rules):
                 state, axes, opt_axes = S.init_state(
                     jax.random.PRNGKey(0), cfg, opt_cfg)
@@ -79,12 +82,13 @@ def test_sharded_decode_matches_forward():
         from repro.models import api
         from repro.launch.mesh import make_test_mesh, mesh_rules
         from repro.distributed.sharding import use_rules
+        from repro.distributed.compat import set_mesh
 
         arch = "recurrentgemma_9b"   # hybrid: ring buffers + LRU state
         cfg = configs.get_config(arch, smoke=True)
         model = api.get_model(cfg)
         mesh = make_test_mesh(data=2, model=2)
-        with jax.set_mesh(mesh), use_rules(mesh_rules(mesh, arch)):
+        with set_mesh(mesh), use_rules(mesh_rules(mesh, arch)):
             params, _ = model.init(jax.random.PRNGKey(0), cfg)
             B, L = 4, 8
             tokens = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
@@ -151,6 +155,7 @@ def test_mini_dryrun_lower_compile_families():
         from repro.launch import steps as S
         from repro.launch.mesh import make_test_mesh, mesh_rules
         from repro.distributed.sharding import use_rules, spec_tree
+        from repro.distributed.compat import set_mesh
         from repro.models import api
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -160,7 +165,7 @@ def test_mini_dryrun_lower_compile_families():
             model = api.get_model(cfg)
             mesh = make_test_mesh(data=2, model=2, pod=2)
             rules = mesh_rules(mesh, arch)
-            with jax.set_mesh(mesh), use_rules(rules):
+            with set_mesh(mesh), use_rules(rules):
                 opt_cfg = optim.OptConfig()
                 pshapes, axes = S.params_shapes(cfg)
                 opt_axes = optim.zero_axes(axes, pshapes, 2)
@@ -194,11 +199,12 @@ def test_moe_a2a_dispatch_matches_scatter():
         from repro.models import moe
         from repro.launch.mesh import make_test_mesh, mesh_rules
         from repro.distributed.sharding import use_rules
+        from repro.distributed.compat import set_mesh
 
         cfg = configs.get_config("deepseek_moe_16b", smoke=True,
                                  capacity_factor=4.0)
         mesh = make_test_mesh(data=4, model=2)
-        with jax.set_mesh(mesh), use_rules(mesh_rules(mesh, "deepseek_moe_16b")):
+        with set_mesh(mesh), use_rules(mesh_rules(mesh, "deepseek_moe_16b")):
             p, _ = moe.init_moe_ffn(jax.random.PRNGKey(0), cfg)
             x = jax.random.normal(jax.random.PRNGKey(1),
                                   (8, 16, cfg.d_model), jnp.float32)
@@ -229,6 +235,7 @@ def test_elastic_restore_across_meshes():
         from repro.launch import steps as S
         from repro.launch.mesh import make_test_mesh, mesh_rules
         from repro.distributed.sharding import use_rules, spec_tree
+        from repro.distributed.compat import set_mesh
         import tempfile
 
         arch = "internlm2_1_8b"
@@ -237,14 +244,14 @@ def test_elastic_restore_across_meshes():
         d = tempfile.mkdtemp()
 
         mesh_a = make_test_mesh(data=4, model=2)
-        with jax.set_mesh(mesh_a), use_rules(mesh_rules(mesh_a, arch)):
+        with set_mesh(mesh_a), use_rules(mesh_rules(mesh_a, arch)):
             state, axes, _ = S.init_state(jax.random.PRNGKey(0), cfg,
                                           opt_cfg, zero_divisor=4)
             Checkpointer(d).save(7, state, blocking=True)
             ref = np.asarray(state.params["embed"])
 
         mesh_b = make_test_mesh(data=2, model=2)
-        with jax.set_mesh(mesh_b), use_rules(mesh_rules(mesh_b, arch)):
+        with set_mesh(mesh_b), use_rules(mesh_rules(mesh_b, arch)):
             state_b, axes_b, _ = S.init_state(jax.random.PRNGKey(1), cfg,
                                               opt_cfg, zero_divisor=2)
             shardings = jax.tree.map(
@@ -260,5 +267,200 @@ def test_elastic_restore_across_meshes():
                 jax.NamedSharding(mesh_b, jax.sharding.PartitionSpec(
                     "model", None)))
             assert p.sharding.mesh.shape["data"] == 2
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# mesh-native ozimmu: error-free cross-device accumulation
+# ---------------------------------------------------------------------------
+
+def test_ozimmu_sharded_bitwise_all_variants():
+    """Contraction-axis sharding over 'model' (8 shards) is bit-identical
+    to the single-device emulation for all four paper variants under the
+    exact-int32 cross-device reduction — f32 and df32 accumulators here
+    (no x64 in this subprocess); genuine f64 is the _x64 test below."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(0)
+        def phi_mat(m, n, phi=1.0):
+            u = rng.uniform(0, 1, (m, n)); z = rng.standard_normal((m, n))
+            return (u - 0.5) * np.exp(phi * z)
+
+        a = jnp.asarray(phi_mat(48, 256), jnp.float32)
+        b = jnp.asarray(phi_mat(256, 64), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        accums = ("f32", "df32")
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+            for accum in accums:
+                cfg = ozimmu.VARIANTS[name].with_(k=6, accum_dtype=accum)
+                ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+                sharded = cfg.with_(mesh_axis="model")
+                with set_mesh(mesh):
+                    got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                        a, b, dn, sharded))(a, b)
+                assert bool(jnp.all(ref == got)), (name, accum)
+                print(name, accum, "bitwise OK")
+        print("OK")
+    """)
+
+
+def test_ozimmu_sharded_bitwise_x64():
+    """Same bitwise invariant with genuine f64 accumulation (x64 mode)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        assert jax.config.jax_enable_x64
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.standard_normal((32, 512)), jnp.float64)
+        b = jnp.asarray(rng.standard_normal((512, 40)), jnp.float64)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+            cfg = ozimmu.VARIANTS[name].with_(k=8, accum_dtype="f64")
+            ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+            with set_mesh(mesh):
+                got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                    a, b, dn, cfg.with_(mesh_axis="model")))(a, b)
+            assert bool(jnp.all(ref == got)), name
+        print("OK")
+    """, x64=True)
+
+
+def test_ozimmu_batch_sharded_matches_single_device():
+    """Batch-dim sharding over 'data' (GSPMD, no cross-device contraction)
+    is bit-identical to single-device emulation — batch entries are
+    independent, so no reduction crosses devices."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((8, 16, 64)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((8, 64, 24)), jnp.float32)
+        dn = (((2,), (1,)), ((0,), (0,)))
+        cfg = ozimmu.VARIANTS["ozimmu_h"].with_(k=6, accum_dtype="df32")
+        ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+        mesh = make_test_mesh(data=8, model=1)
+        with set_mesh(mesh):
+            spec_a = NamedSharding(mesh, P("data", None, None))
+            spec_b = NamedSharding(mesh, P("data", None, None))
+            aa = jax.device_put(a, spec_a)
+            bb = jax.device_put(b, spec_b)
+            got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                a, b, dn, cfg))(aa, bb)
+        assert bool(jnp.all(ref == got))
+        print("OK")
+    """)
+
+
+def test_ozimmu_sharded_vjp_bitwise():
+    """Gradients through the mesh-native emulated contraction equal the
+    single-device gradients bit for bit (the custom VJP's cotangent
+    contractions run through the same sharded scheme)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.standard_normal((32, 256)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        cfg = ozimmu.VARIANTS["ozimmu_h"].with_(k=6, accum_dtype="df32")
+        loss0 = lambda a, b: jnp.sum(
+            jnp.sin(ozimmu.ozimmu_dot_general(a, b, dn, cfg)))
+        g_ref = jax.grad(loss0, argnums=(0, 1))(a, b)
+        sharded = cfg.with_(mesh_axis="model")
+        loss1 = lambda a, b: jnp.sum(
+            jnp.sin(ozimmu.ozimmu_dot_general(a, b, dn, sharded)))
+        mesh = make_test_mesh(data=1, model=8)
+        with set_mesh(mesh):
+            g_got = jax.jit(jax.grad(loss1, argnums=(0, 1)))(a, b)
+        for r, g, nm in (*zip(g_ref, g_got, ("da", "db")),):
+            assert bool(jnp.all(r == g)), nm
+        print("OK")
+    """)
+
+
+def test_psum_df32_error_free_vs_plain_f32():
+    """The compensated DF32 reduction keeps what a plain f32 psum rounds
+    away: partials engineered so small terms vanish under f32 summation."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.accumulate import DF32
+        from repro.distributed import collectives
+        from repro.distributed.compat import set_mesh, shard_map
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh(data=8, model=1)
+        # device i holds hi = (-1)^i * 2^24, lo = 0.5: the 2^24 terms cancel
+        # pairwise, so the true sum is 4.0.  A plain f32 psum of (hi + lo)
+        # collapses every partial to +-2^24 first (0.5 is under half an ulp
+        # at 2^24, and -16777215.5 rounds half-to-even to -2^24 too) and
+        # returns 0.0.
+        his = jnp.asarray([(-1.0) ** i * 2.0 ** 24 for i in range(8)],
+                          jnp.float32).reshape(8, 1)
+        los = jnp.full((8, 1), 0.5, jnp.float32)
+
+        def body(h, l):
+            c = DF32(h[0], l[0])
+            plain = jax.lax.psum(h[0] + l[0], "data")
+            comp = collectives.psum_df32(c, "data")
+            return plain[None], (comp.hi + comp.lo)[None]
+
+        plain, comp = jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data")), check_vma=False))(his, los)
+        assert float(plain[0, 0]) == 0.0, plain     # f32 psum loses it
+        assert float(comp[0, 0]) == 4.0, comp       # DF32 keeps it
+        print("OK")
+    """)
+
+
+def test_ozimmu_sharded_df32_reduce_accuracy():
+    """The @axis/df32 strategy (compensated partial-accumulator reduction)
+    stays at the unsharded error level — no f32-psum accuracy cliff."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(4)
+        a_np = rng.standard_normal((48, 512))
+        b_np = rng.standard_normal((512, 32))
+        exact = a_np @ b_np                      # numpy f64 reference
+        a = jnp.asarray(a_np, jnp.float32)
+        b = jnp.asarray(b_np, jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        cfg = ozimmu.VARIANTS["ozimmu_h"].with_(k=6, accum_dtype="df32")
+        ref = np.asarray(ozimmu.ozimmu_dot_general(a, b, dn, cfg),
+                         np.float64)
+        sharded = cfg.with_(mesh_axis="model", mesh_reduce="df32")
+        mesh = make_test_mesh(data=1, model=8)
+        with set_mesh(mesh):
+            got = np.asarray(jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                a, b, dn, sharded))(a, b), np.float64)
+        scale = np.abs(exact).max()
+        e_ref = np.abs(ref - exact).max() / scale
+        e_got = np.abs(got - exact).max() / scale
+        print("err unsharded", e_ref, "sharded/df32-reduce", e_got)
+        # error-free reduction: sharded error within 2x of unsharded
+        # (local per-shard scales can make it smaller, never psum-worse)
+        assert e_got <= 2 * e_ref + 1e-7, (e_got, e_ref)
         print("OK")
     """)

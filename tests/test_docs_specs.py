@@ -1,0 +1,73 @@
+"""Docs ↔ code consistency: every engine spec string quoted in the docs
+and README must parse through ``make_engine``.
+
+Guards against grammar drift: when parse_spec grows or changes a token
+(as with the ``@mesh_axis`` suffix), stale examples in the prose fail
+here instead of silently rotting.  Scope: backtick-quoted tokens in
+*.md that look like ozimmu engine specs (start with ``ozimmu`` and
+contain only spec characters), minus known non-spec identifiers.
+"""
+import os
+import re
+
+import pytest
+
+from repro.core.engine import make_engine
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md"))
+
+# module/function names and grammar templates that legitimately start with
+# "ozimmu" but are not engine specs
+IGNORE = {
+    "ozimmu_matmul", "ozimmu_dot_general", "ozimmu_config", "ozimmu.py",
+    "ozimmu_roofline", "ozimmu_h_k8",
+}
+# a candidate spec: spec charset only, no brackets/dots/parens (those mark
+# grammar templates like `ozimmu[-k]` or code references)
+CANDIDATE = re.compile(r"^ozimmu[a-z0-9_]*(-[0-9]+)?(:[a-z0-9_]+)?"
+                       r"(@[a-z0-9_]+(/[a-z0-9_]+)?)?$")
+BACKTICKED = re.compile(r"`([^`\n]+)`")
+
+
+def doc_specs():
+    found = []
+    for rel in DOC_FILES:
+        with open(os.path.join(REPO, rel)) as f:
+            text = f.read()
+        # code fences can hold several specs per line (spec grammar blocks
+        # are skipped: they contain metacharacters the CANDIDATE rejects)
+        tokens = set(BACKTICKED.findall(text))
+        for block in re.findall(r"```.*?```", text, flags=re.S):
+            tokens.update(block.replace("```", " ").split())
+        for tok in tokens:
+            for part in tok.replace(",", " ").split():
+                if part.lower() in IGNORE:
+                    continue
+                if CANDIDATE.match(part):
+                    found.append((rel, part))
+    return sorted(set(found))
+
+
+SPECS = doc_specs()
+
+
+def test_docs_quote_enough_specs():
+    """The extractor still sees the documented examples (guards against a
+    silent regex/doc-layout change gutting this check)."""
+    specs = {s for _, s in SPECS}
+    assert {"ozimmu_h-8", "ozimmu_h-8:df32@model"} <= specs, specs
+    assert len(specs) >= 6, specs
+
+
+@pytest.mark.parametrize("rel,spec", SPECS,
+                         ids=[f"{r}:{s}" for r, s in SPECS])
+def test_doc_spec_parses(rel, spec):
+    make_engine(spec)  # raises ValueError on drift
+
+
+def test_native_specs_parse():
+    for spec in ("bf16", "f32", "f64"):
+        make_engine(spec)
