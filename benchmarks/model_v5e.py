@@ -45,12 +45,16 @@ class PhaseTimes:
 
 def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
                 accum_dtype: str = "f64", in_bytes: int = 8,
-                fused_split: bool = True) -> PhaseTimes:
+                fused_split: bool = True,
+                fused_epilogue: bool = True) -> PhaseTimes:
     """Modeled seconds per phase on one v5e chip.
 
     variant: ozimmu | ozimmu_rn | ozimmu_ef | ozimmu_h.
     fused_split: single-HBM-read fused extraction (our Pallas kernel);
     False models Ootomo-style per-slice passes.
+    fused_epilogue: one-pass convert+scale+add with the accumulator RMW'd
+    in VMEM (kernels/scale_accum.py); False models a materialized scaled
+    term per high-precision add (an extra write+read of the term).
     """
     beta = compute_beta(n)
     r = compute_r(n, beta)
@@ -73,9 +77,11 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     t_gemm = pairs * 2.0 * m * n * p / PEAK_INT8
 
     # --- accum: per high-precision term, read int32 product (4B) + RMW of
-    # the hp accumulator (2*hp_b) over (m, p).
+    # the hp accumulator (2*hp_b) over (m, p); the unfused epilogue also
+    # materializes the converted+scaled term (one write + one read of hp_b).
     hp_terms = num_highprec_adds(k, r, group_ef)
-    accum_bytes = hp_terms * m * p * (4 + 2 * hp_b)
+    per_term = (4 + 2 * hp_b) if fused_epilogue else (4 + 4 * hp_b)
+    accum_bytes = hp_terms * m * p * per_term
     t_accum = accum_bytes / HBM_BW
 
     # --- copy: C <- alpha D + beta C, one read+write of (m, p)

@@ -101,6 +101,39 @@ _HEADLINES = {
 }
 
 
+def check_against(summary: dict, committed_path: str, tol: float = 2.0):
+    """Regression gate: the run's accuracy headline must not be worse than
+    the committed trajectory artifact (``BENCH_ozimmu.json``) by more than
+    ``tol``x per variant.  One-sided — better-than-committed always passes
+    (quick grids at smaller n measure smaller errors).  Returns a list of
+    human-readable failures (empty = gate passes); raises on a summary
+    that cannot be compared at all (missing/failed accuracy bench).
+    """
+    with open(committed_path) as f:
+        committed = json.load(f)
+    failures = []
+    bench = summary.get("benches", {}).get("accuracy")
+    if bench is None or bench.get("status") != "ok":
+        raise SystemExit(f"[check] accuracy bench missing or failed in "
+                         f"this run: {bench}")
+    got = bench.get("headline", {}).get("err", {})
+    want = committed["benches"]["accuracy"]["headline"]["err"]
+    for variant, ref_err in sorted(want.items()):
+        new_err = got.get(variant)
+        if new_err is None:
+            failures.append(f"accuracy: variant {variant!r} missing from "
+                            f"this run's headline")
+        elif new_err > tol * ref_err:
+            failures.append(
+                f"accuracy: {variant} err {new_err:.3e} exceeds "
+                f"{tol}x committed {ref_err:.3e}")
+    for name, entry in summary["benches"].items():
+        if entry.get("status") != "ok":
+            failures.append(f"{name}: status {entry.get('status')!r} "
+                            f"({entry.get('error')})")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -116,6 +149,11 @@ def main(argv=None):
                          "(--quick/--only) default to bench_summary.json so "
                          "they never clobber the committed record. "
                          "'' disables")
+    ap.add_argument("--check-against", default=None, metavar="BENCH_JSON",
+                    help="regression gate: fail (exit 1) if this run's "
+                         "accuracy headline errors exceed 2x the committed "
+                         "summary's (e.g. BENCH_ozimmu.json), or any bench "
+                         "failed.  The same gate CI runs — runnable locally.")
     args = ap.parse_args(argv)
     if args.summary is None:
         args.summary = ("BENCH_ozimmu.json"
@@ -183,6 +221,14 @@ def main(argv=None):
     if failures:
         print("\nFAILED benches:", failures)
         sys.exit(1)
+    if args.check_against:
+        gate = check_against(summary, args.check_against)
+        if gate:
+            print("\n[check] REGRESSION GATE FAILED vs", args.check_against)
+            for line in gate:
+                print("[check]  -", line)
+            sys.exit(1)
+        print(f"[check] regression gate vs {args.check_against}: OK")
     print("\nall benches complete; JSON in", args.out)
 
 

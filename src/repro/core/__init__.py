@@ -4,6 +4,8 @@ from repro.core.splitting import (Split, compute_beta, compute_r,
                                   reconstruct, residual)
 from repro.core.accumulate import (int8_gemm, matmul_naive, matmul_group_ef,
                                    DF32, num_highprec_adds)
+from repro.core.plan import (DEFAULT_TARGET_EPS, Plan, plan_contraction,
+                             kernel_blocks)
 from repro.core.ozimmu import (OzimmuConfig, VARIANTS, ozimmu_matmul,
                                ozimmu_dot_general, parse_spec)
 from repro.core.engine import MatmulEngine, make_engine

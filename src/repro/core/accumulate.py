@@ -43,6 +43,17 @@ Both matmuls take two optional hooks for mesh-sharded contractions
     ``accum="df32"``, the raw f64/f32 accumulator otherwise.  The caller
     owns the single final rounding — e.g. after an error-free cross-device
     reduction of per-shard partials.
+
+Fused-epilogue hook (``scale_accum_fn``):
+
+Both matmuls also accept a ``scale_accum_fn(prod, srow, scol, acc) -> acc``
+hook that performs one convert+scale+add step — ``acc`` is the running
+accumulator (:class:`DF32` or a plain f64/f32 array), ``prod`` the INT32
+product, ``srow``/``scol`` the per-row/col power-of-two scales (any 2^e
+group exponent already folded into ``srow``; exact).  The default hook is
+the inline jnp epilogue below; ``repro.kernels.ops.scale_accum_update``
+substitutes the one-HBM-pass Pallas kernel (the ``use_pallas="fused"``
+path), which performs the bit-identical operation sequence.
 """
 from __future__ import annotations
 
@@ -145,6 +156,27 @@ def _term_pairs(k: int) -> Sequence[Tuple[int, int]]:
     return [(s, g - s) for g in range(2, k + 2) for s in range(1, g)]
 
 
+# ---------------------------------------------------------------------------
+# per-term convert+scale+add — the default (inline jnp) epilogue hooks
+# ---------------------------------------------------------------------------
+
+def _scale_accum_df32(prod: jax.Array, srow: jax.Array, scol: jax.Array,
+                      acc: DF32) -> DF32:
+    """One df32 epilogue step: ``acc += srow * float(prod) * scol``,
+    compensated.  ``srow``/``scol`` are f32 powers of two (any group
+    exponent 2^e folded into ``srow`` — exact)."""
+    term = int32_to_df32(prod)
+    term = DF32(_outer_scale(term.hi, srow, scol),
+                _outer_scale(term.lo, srow, scol))
+    return df32_add_df(acc, term)
+
+
+def _scale_accum_plain(prod: jax.Array, srow: jax.Array, scol: jax.Array,
+                       acc: jax.Array) -> jax.Array:
+    """One plain-accumulator epilogue step in ``acc.dtype`` (f64/f32)."""
+    return acc + _outer_scale(prod.astype(acc.dtype), srow, scol)
+
+
 def num_highprec_adds(k: int, r: int, group_ef: bool) -> int:
     """Number of high-precision matrix additions (paper's accounting)."""
     if not group_ef:
@@ -177,13 +209,17 @@ def _reduce_products(prods, product_reduce: Optional[Callable]):
 
 def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
                  out_dtype=None, partial: bool = False,
-                 product_reduce: Optional[Callable] = None
+                 product_reduce: Optional[Callable] = None,
+                 scale_accum_fn: Optional[Callable] = None,
+                 pair_gemm_fn: Optional[Callable] = None
                  ) -> Union[jax.Array, DF32]:
     """One INT8 GEMM + one high-precision scaled add per slice pair.
 
     Batched: digits may be ``(k, *batch, m, n)`` / ``(k, *batch, n, p)``;
     every slice-pair product is then ONE batched int8 ``dot_general``.
-    ``partial`` / ``product_reduce``: see the module docstring.
+    ``pair_gemm_fn(s, t) -> int32`` overrides the per-pair GEMM (1-indexed
+    slice pair; the Pallas hook of ``use_pallas``).  ``partial`` /
+    ``product_reduce`` / ``scale_accum_fn``: see the module docstring.
     """
     assert sa.axis == 0 and sb.axis == 1, "A needs row scales, B column scales"
     k = sa.digits.shape[0]
@@ -191,27 +227,24 @@ def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
     out_shape = sa.digits.shape[1:-1] + (sb.digits.shape[-1],)
     out_dtype = out_dtype or sa.scale.dtype
     pairs = _term_pairs(k)
-    prods = _reduce_products(
-        [int8_gemm(sa.digits[s - 1], sb.digits[t - 1]) for s, t in pairs],
-        product_reduce)
+    gemm = pair_gemm_fn or (
+        lambda s, t: int8_gemm(sa.digits[s - 1], sb.digits[t - 1]))
+    prods = _reduce_products([gemm(s, t) for s, t in pairs], product_reduce)
 
     if accum == "df32":
+        fn = scale_accum_fn or _scale_accum_df32
         acc = df32_zero(out_shape)
         for (s, t), prod in zip(pairs, prods):
-            term = int32_to_df32(prod)
-            scale_a = sa.scale[s - 1].astype(jnp.float32)
-            scale_b = sb.scale[t - 1].astype(jnp.float32)
-            term = DF32(_outer_scale(term.hi, scale_a, scale_b),
-                        _outer_scale(term.lo, scale_a, scale_b))
-            acc = df32_add_df(acc, term)
+            acc = fn(prod, sa.scale[s - 1].astype(jnp.float32),
+                     sb.scale[t - 1].astype(jnp.float32), acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
+    fn = scale_accum_fn or _scale_accum_plain
     c = jnp.zeros(out_shape, acc_dtype)
     for (s, t), prod in zip(pairs, prods):
-        c = c + _outer_scale(prod.astype(acc_dtype),
-                             sa.scale[s - 1].astype(acc_dtype),
-                             sb.scale[t - 1].astype(acc_dtype))
+        c = fn(prod, sa.scale[s - 1].astype(acc_dtype),
+               sb.scale[t - 1].astype(acc_dtype), c)
     return c if partial else c.astype(out_dtype)
 
 
@@ -239,7 +272,8 @@ def group_gemm_concat(sa: Split, sb: Split, pairs) -> jax.Array:
 def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
                     out_dtype=None, r: Optional[int] = None,
                     group_gemm_fn=None, partial: bool = False,
-                    product_reduce: Optional[Callable] = None
+                    product_reduce: Optional[Callable] = None,
+                    scale_accum_fn: Optional[Callable] = None
                     ) -> Union[jax.Array, DF32]:
     """Group-wise error-free accumulation (Alg. 6; Alg. 7 when r >= k).
 
@@ -266,23 +300,24 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
     prods = _reduce_products([gg(pairs) for _, pairs in chunks],
                              product_reduce)
 
+    # The 2^(-beta*g) group exponent folds into the row scale (exact:
+    # powers of two), matching the fused kernel's srow contract.
     if accum == "df32":
+        fn = scale_accum_fn or _scale_accum_df32
         acc = df32_zero(out_shape)
         base_a = sa.base.astype(jnp.float32)
         base_b = sb.base.astype(jnp.float32)
         for (g, _), prod in zip(chunks, prods):
             e = jnp.asarray(2.0 ** (-beta * g), jnp.float32)
-            term = int32_to_df32(prod)
-            term = DF32(_outer_scale(term.hi, base_a, base_b) * e,
-                        _outer_scale(term.lo, base_a, base_b) * e)
-            acc = df32_add_df(acc, term)
+            acc = fn(prod, base_a * e, base_b, acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
+    fn = scale_accum_fn or _scale_accum_plain
     c = jnp.zeros(out_shape, acc_dtype)
     base_a = sa.base.astype(acc_dtype)
     base_b = sb.base.astype(acc_dtype)
     for (g, _), prod in zip(chunks, prods):
         e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
-        c = c + _outer_scale(prod.astype(acc_dtype), base_a, base_b) * e
+        c = fn(prod, base_a * e, base_b, c)
     return c if partial else c.astype(out_dtype)

@@ -5,7 +5,15 @@ Specs (CLI flag ``--matmul_engine``):
 
   * ``bf16`` / ``f32`` / ``f64``      — native XLA dot in that compute dtype
   * ``ozimmu[-k]``, ``ozimmu_rn[-k]``, ``ozimmu_ef[-k]``, ``ozimmu_h[-k]``
-    optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper)
+    optionally ``:f64|:f32|:df32``    — Ozaki-scheme emulation (paper).
+    ``k`` may be ``auto``: the execution planner (``repro.core.plan``)
+    picks the smallest slice count meeting ``OzimmuConfig.target_eps``
+    from the operands' probed exponent ranges (eager calls) or the
+    static mantissa-coverage plan (inside jit).
+  * ``...:fused``                     — the one-HBM-pass Pallas pipeline:
+    fused k-slice extraction, VMEM-resident group GEMMs, and the fused
+    convert+scale+add epilogue; bit-identical to the XLA path and
+    composable with every other token (e.g. ``ozimmu_h-auto:df32:fused``).
   * ``...@mesh_axis[/int32|/df32]``   — mesh-native sharded emulation: the
     contraction axis is sharded over the named mesh axis and the
     cross-device accumulation stays inside the scheme's exactness

@@ -42,7 +42,7 @@ import math
 from functools import partial
 from functools import partial as partial_fn  # alias: `partial` is also a
                                              # keyword arg of _bmm_local
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,11 +58,23 @@ DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
 
 @dataclasses.dataclass(frozen=True)
 class OzimmuConfig:
-    k: int = 8                      # number of slices
+    k: int = 8                      # number of slices (fixed-k configs)
     split: str = "rn_const"         # bitmask | rn | rn_const
     accumulate: str = "group_ef"    # naive | group_ef
     accum_dtype: str = "f64"        # f64 | f32 | df32
-    use_pallas: bool = False        # route group GEMMs through the Pallas kernel
+    use_pallas: Union[bool, str] = False
+                                    # False: XLA everywhere.  True: group
+                                    # GEMMs through the Pallas kernel.
+                                    # "fused" (spec token ``:fused``): the
+                                    # whole one-HBM-pass pipeline — fused
+                                    # k-slice extraction, Pallas group
+                                    # GEMMs, fused convert+scale+add
+                                    # epilogue (see core/plan.py docs).
+    auto_k: bool = False            # spec token ``auto``: per-contraction
+                                    # accuracy-driven k (core/plan.py)
+    target_eps: Optional[float] = None
+                                    # auto-k error target; None = the
+                                    # planner default (~f64-faithful)
     mesh_axis: Optional[str] = None  # mesh-native contraction sharding axis
     mesh_reduce: str = "int32"      # int32 (exact product psum) | df32
                                     # (compensated partial-accumulator psum)
@@ -98,9 +110,13 @@ def parse_spec(spec: str) -> OzimmuConfig:
     """Parse ``"ozimmu_h-8"`` / ``"ozimmu_ef-10:df32"`` style strings.
 
     Full grammar (docs/engine.md):
-    ``variant["-"k][":"accum]["@"mesh_axis["/"mesh_reduce]]`` — e.g.
-    ``"ozimmu_h-8:df32@model"`` runs contraction-sharded over the ``model``
-    mesh axis with the exact int32 cross-device reduction, and
+    ``variant["-"k][":"opt]*["@"mesh_axis["/"mesh_reduce]]`` where ``k`` is
+    an integer or ``auto`` (per-contraction accuracy-driven slice count,
+    core/plan.py) and each ``:opt`` is an accumulator dtype
+    (``f64``/``f32``/``df32``) or ``fused`` (the one-HBM-pass Pallas
+    pipeline) — e.g. ``"ozimmu_h-auto:df32:fused@model"`` runs the fused
+    pipeline, contraction-sharded over the ``model`` mesh axis with the
+    exact int32 cross-device reduction, with auto-planned k;
     ``"...@model/df32"`` selects the compensated partial-accumulator
     reduction instead (see docs/distributed.md).
     """
@@ -115,21 +131,35 @@ def parse_spec(spec: str) -> OzimmuConfig:
         if mesh_reduce not in _MESH_REDUCES:
             raise ValueError(f"unknown mesh reduce {mesh_reduce!r}; "
                              f"options: {_MESH_REDUCES}")
-    accum_dtype = "f64"
-    if ":" in spec:
-        spec, _, accum_dtype = spec.partition(":")
-        if accum_dtype not in ("f64", "f32", "df32"):
-            raise ValueError(f"unknown accumulator dtype {accum_dtype!r}; "
-                             f"options: f64, f32, df32")
+    accum_dtype, use_pallas = "f64", False
+    spec, *opts = spec.split(":")
+    seen_accum = False
+    for opt in opts:
+        if opt in ("f64", "f32", "df32"):
+            if seen_accum:
+                raise ValueError(f"duplicate accumulator dtype {opt!r} "
+                                 f"in engine spec")
+            accum_dtype, seen_accum = opt, True
+        elif opt == "fused":
+            if use_pallas == "fused":
+                raise ValueError("duplicate 'fused' token in engine spec")
+            use_pallas = "fused"
+        else:
+            raise ValueError(f"unknown engine spec option {opt!r}; "
+                             f"options: f64, f32, df32, fused")
     name, _, kstr = spec.partition("-")
     if name not in VARIANTS:
         raise ValueError(f"unknown ozimmu variant {name!r}; "
                          f"options: {sorted(VARIANTS)}")
-    if kstr and (not kstr.isdigit() or int(kstr) < 1):
-        raise ValueError(f"bad slice count {kstr!r} in engine spec")
+    auto_k = kstr == "auto"
+    if kstr and not auto_k and (not kstr.isdigit() or int(kstr) < 1):
+        raise ValueError(f"bad slice count {kstr!r} in engine spec "
+                         f"(an integer >= 1, or 'auto')")
     cfg = VARIANTS[name]
-    return cfg.with_(k=int(kstr) if kstr else cfg.k, accum_dtype=accum_dtype,
-                     mesh_axis=mesh_axis, mesh_reduce=mesh_reduce)
+    return cfg.with_(k=cfg.k if (auto_k or not kstr) else int(kstr),
+                     auto_k=auto_k, accum_dtype=accum_dtype,
+                     use_pallas=use_pallas, mesh_axis=mesh_axis,
+                     mesh_reduce=mesh_reduce)
 
 
 def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
@@ -141,9 +171,23 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     ``a``/``b`` are per-device shards of a longer contraction;
     ``rowmax_reduce`` (e.g. a mesh-axis ``pmax``) then makes the digit
     grids globally agreed — see docs/distributed.md.
+
+    With ``cfg.use_pallas == "fused"`` the extraction runs through the
+    one-HBM-pass Pallas kernel (``kernels.ops.split_fused``) for the
+    geometric strategies; the adaptive RN strategy needs a fresh row-max
+    per slice and keeps the library splitter (its k re-reads are the
+    point the paper's Alg. 8 removes).  Digits and scales are
+    bit-identical either way.
     """
     n = n_total if n_total is not None else a.shape[-1]
     beta = splitting.compute_beta(n)
+    if cfg.use_pallas == "fused" and cfg.split in ("bitmask", "rn_const"):
+        from repro.kernels import ops as kops  # lazy: kernels are optional
+        sa = kops.split_fused(a, cfg.k, beta, mode=cfg.split, axis=0,
+                              rowmax_reduce=rowmax_reduce)
+        sb = kops.split_fused(b, cfg.k, beta, mode=cfg.split, axis=1,
+                              rowmax_reduce=rowmax_reduce)
+        return sa, sb
     splitter = _SPLITTERS[cfg.split]
     sa = splitter(a, cfg.k, beta=beta, axis=0, rowmax_reduce=rowmax_reduce)
     sb = splitter(b, cfg.k, beta=beta, axis=1, rowmax_reduce=rowmax_reduce)
@@ -154,23 +198,38 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
                n_total: Optional[int] = None, rowmax_reduce=None,
                product_reduce=None, partial: bool = False):
     """Single-device emulated batched matmul (the shard-local body of the
-    mesh-native path when the distributed hooks are given)."""
+    mesh-native path when the distributed hooks are given).
+
+    ``cfg.use_pallas``: ``True`` routes the group GEMMs through the Pallas
+    kernel; ``"fused"`` additionally replaces the per-slice splitter loop
+    (``split_operands`` above) and the convert→scale→add epilogue with the
+    one-HBM-pass kernels — every stage bit-identical to the XLA path, so
+    the distributed hooks and ``partial`` compose unchanged.
+    """
     sa, sb = split_operands(a, b, cfg, n_total=n_total,
                             rowmax_reduce=rowmax_reduce)
-    group_gemm_fn = None
+    group_gemm_fn = scale_accum_fn = pair_gemm_fn = None
     if cfg.use_pallas:
         from repro.kernels import ops as kops  # lazy: kernels are optional
-        group_gemm_fn = partial_fn(kops.group_gemm, sa, sb)
+        if cfg.accumulate == "naive":
+            # naive accumulation has no groups; each slice pair runs as a
+            # G=1 Pallas GEMM (bit-identical to the XLA dot_general)
+            pair_gemm_fn = lambda s, t: kops.group_gemm(sa, sb, [(s, t)])
+        else:
+            group_gemm_fn = partial_fn(kops.group_gemm, sa, sb)
+        if cfg.use_pallas == "fused":
+            scale_accum_fn = kops.scale_accum_update
     if cfg.accumulate == "naive":
         return accumulate.matmul_naive(
             sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
-            partial=partial, product_reduce=product_reduce)
+            partial=partial, product_reduce=product_reduce,
+            scale_accum_fn=scale_accum_fn, pair_gemm_fn=pair_gemm_fn)
     n = n_total if n_total is not None else a.shape[-1]
     r = splitting.compute_r(n, sa.beta)
     return accumulate.matmul_group_ef(
         sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype, r=r,
         group_gemm_fn=group_gemm_fn, partial=partial,
-        product_reduce=product_reduce)
+        product_reduce=product_reduce, scale_accum_fn=scale_accum_fn)
 
 
 @functools.lru_cache(maxsize=256)
@@ -259,6 +318,13 @@ def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
         # explicitly (the documented footgun — see docs/engine.md) instead
         # of emitting one truncation warning per accumulation step
         cfg = cfg.with_(accum_dtype="f32")
+    if cfg.auto_k:
+        # accuracy-driven slice count (core/plan.py): probes concrete
+        # operands eagerly; inside a jit trace it resolves to the static
+        # mantissa-coverage plan.  Resolved BEFORE the mesh dispatch so
+        # the jitted sharded entry is cached on the concrete k.
+        from repro.core import plan as _plan
+        cfg = cfg.with_(k=_plan.auto_k(a, b, cfg), auto_k=False)
     mesh = _mesh_for(cfg, a.shape[-1])
     if mesh is not None:
         return _bmm_sharded(a, b, cfg, mesh)

@@ -1,0 +1,288 @@
+"""Per-contraction execution planner for the Ozaki-scheme emulation.
+
+Two planning decisions are made here, both static per contraction:
+
+**Accuracy-driven auto-k** (spec token ``auto``, e.g. ``ozimmu_h-auto``):
+instead of a hand-picked slice count, the planner picks the smallest ``k``
+whose modeled error stays under ``OzimmuConfig.target_eps`` (default
+:data:`DEFAULT_TARGET_EPS`, ~f64-faithful).  The model follows the
+exponent-distribution argument of *Improved Scaling for Fast Mode of Ozaki
+Scheme II*: the splitting truncation after ``k`` slices is bounded by
+``rowmax * 2^(1 - beta k)`` per element, so the bits the contraction needs
+are the target bits plus every amplification the measured *elementwise
+relative* error picks up on the way:
+
+    needed = bits(target_eps)            # -log2 of the target bound
+           + gap(A) + gap(B)             # probed operand exponent ranges:
+                                         #   max row-max exponent minus the
+                                         #   smallest per-row RMS exponent
+                                         #   (output entries live at the
+                                         #   row-RMS scale, the truncation
+                                         #   at the row-max scale)
+           + ceil(log2(m p))             # min |c_ij| over the output under
+                                         #   random cancellation shrinks
+                                         #   like 1/(m p)
+           + ceil(log2(n)) / 2           # sqrt(n) CLT growth of |c| vs the
+                                         #   n-term absolute error bound
+           + guard                       # 2 bits; +5 for truncation
+                                         #   splitting (bitmask digits round
+                                         #   away-from-half a full ulp and
+                                         #   waste the sign bit)
+    k = ceil(needed / beta)
+
+The probe runs on **concrete** operands (eager calls, benchmarks); under a
+``jit`` trace there are no values to probe and the planner falls back to a
+static, shape-only plan that covers the input mantissa
+(``needed = t + ceil(log2 n) + guard``) — deterministic, and exactly the
+paper's "emulate the input precision faithfully" posture.  Exponents come
+from ``frexp`` as everywhere else in the repo (no float ``log2``).
+
+**Kernel block autotuning**: a small static table mapping problem dims to
+``(bm, bn, bp)`` Pallas tile sizes, ``lru_cache``-d like the jitted sharded
+entry of ``core/ozimmu.py``, consumed by all three kernels through
+``repro/kernels/ops.py``.  The table trades VMEM residency (input tile +
+``k`` int8 slices + int32/df32 accumulator tiles must fit in ~16 MB)
+against grid overhead; each kernel aligns the preferred tile to its own
+sublane/lane multiple via :func:`tile`.
+
+The planner's cost accounting reuses the paper's own accounting:
+:func:`repro.core.accumulate.num_highprec_adds` for step (iv) and the
+fast-mode pair count ``k(k+1)/2`` for step (iii) — see
+``docs/algorithms.md#the-execution-planner-auto-k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.accumulate import num_highprec_adds
+from repro.core.splitting import compute_beta, compute_r
+
+__all__ = ["DEFAULT_TARGET_EPS", "Plan", "plan_contraction", "auto_k",
+           "operand_gap_bits", "kernel_blocks", "tile", "describe_config"]
+
+# ~f64-faithful: at or below the elementwise relative error a plain FP64
+# GEMM measures on the paper's phi-matrix grid (1e-11..7e-12 there), with
+# headroom for harder operands.  2^-40 ~= 9.1e-13.
+DEFAULT_TARGET_EPS = 2.0 ** -40
+
+_MANTISSA = {np.dtype(np.float64): 53, np.dtype(np.float32): 24}
+
+# Slice counts outside this window are either meaningless (k < 2 cannot
+# carry a residual) or pure waste (k*beta beyond mantissa + probe-able
+# spread extracts all-zero digits).
+K_MIN, K_MAX = 2, 16
+
+_GUARD_BITS = 2
+_TRUNC_EXTRA_BITS = 5  # bitmask splitting: ~1 ulp truncation + no sign bit
+
+
+def _clog2(x: int) -> int:
+    """Exact integer ceil(log2 x) for x >= 1."""
+    return max(0, (int(x) - 1).bit_length())
+
+
+def _exponents(v: np.ndarray) -> np.ndarray:
+    """ceil(log2 v_i) per positive entry via frexp (no log2)."""
+    _, e = np.frexp(v)
+    return e
+
+
+def operand_gap_bits(x, axis: int) -> int:
+    """Probed exponent range of one operand: bits between the largest
+    row-max and the smallest per-row RMS (rows for ``axis=0``, columns for
+    ``axis=1``; leading axes are batch).  This is the amplification the
+    elementwise relative error of the product inherits from the operand's
+    dynamic range; clipped to the operand's mantissa width (spread beyond
+    the mantissa is unrepresentable in the input to begin with).
+
+    The O(m*n) reductions run where the operand lives (on device for jax
+    arrays); only the per-row vectors come back to the host.
+    """
+    m_axis = -1 if axis == 0 else -2
+    xp = np
+    try:
+        import jax
+        import jax.numpy as jnp
+        if isinstance(x, jax.Array):
+            xp = jnp
+    except ImportError:
+        pass
+    a = xp.abs(x)
+    rowmax = np.asarray(a.max(axis=m_axis))
+    rowrms = np.asarray(xp.sqrt(xp.mean(xp.square(a), axis=m_axis)))
+    live = rowmax > 0
+    if not live.any():
+        return 0
+    gap = int(_exponents(rowmax[live]).max()) \
+        - int(_exponents(rowrms[live]).min())
+    t = _MANTISSA.get(np.dtype(x.dtype), 24)
+    return int(min(max(gap, 0), t))
+
+
+def _bits_of(eps: float) -> int:
+    if not (0.0 < eps < 1.0):
+        raise ValueError(f"target_eps must be in (0, 1), got {eps}")
+    return int(math.ceil(-math.log2(eps)))
+
+
+def _clamp_k(k: int) -> int:
+    return max(K_MIN, min(K_MAX, k))
+
+
+def choose_k(n: int, beta: int, target_eps: float, *, split: str,
+             mantissa: int, m: int = 1, p: int = 1,
+             gap_a: Optional[int] = None, gap_b: Optional[int] = None
+             ) -> int:
+    """Smallest k meeting ``target_eps`` under the bit model above.
+
+    ``gap_a``/``gap_b`` are the probed operand exponent ranges; ``None``
+    means "no concrete operands" (traced call) and selects the static
+    mantissa-coverage plan.
+    """
+    guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split == "bitmask" else 0)
+    if gap_a is None or gap_b is None:
+        needed = mantissa + _clog2(n) + guard
+    else:
+        needed = (_bits_of(target_eps) + gap_a + gap_b
+                  + _clog2(m * p) + (_clog2(n) + 1) // 2 + guard)
+    return _clamp_k(-(-needed // beta))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One contraction's resolved execution parameters + cost accounting."""
+
+    k: int
+    beta: int
+    r: int
+    bits_needed: int           # needed bits the chosen k covers (k * beta)
+    probed: bool               # True: concrete-operand probe; False: static
+    int8_gemms: int            # fast-mode slice pairs, k(k+1)/2 (step iii)
+    highprec_adds: int         # paper accounting for step (iv)
+    blocks: Tuple[int, int, int]   # preferred (bm, bn, bp) kernel tiles
+
+    def describe(self) -> str:
+        return (f"k={self.k} (beta={self.beta}, "
+                f"{'probed' if self.probed else 'static'}, "
+                f"covers {self.bits_needed} bits), "
+                f"{self.int8_gemms} int8 GEMMs, "
+                f"{self.highprec_adds} high-precision adds, "
+                f"blocks={self.blocks}")
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_static(n: int, m: int, p: int, k: int, group_ef: bool) -> Plan:
+    beta = compute_beta(n)
+    r = compute_r(n, beta)
+    return Plan(k=k, beta=beta, r=r, bits_needed=k * beta, probed=False,
+                int8_gemms=k * (k + 1) // 2,
+                highprec_adds=num_highprec_adds(k, r, group_ef),
+                blocks=kernel_blocks(m, n, p))
+
+
+def plan_contraction(cfg, m: int, n: int, p: int, *,
+                     a=None, b=None) -> Plan:
+    """Resolve the execution plan for ``(m, n) @ (n, p)`` under ``cfg``
+    (an :class:`repro.core.ozimmu.OzimmuConfig`).
+
+    With concrete operands ``a``/``b`` and ``cfg.auto_k``, the accuracy
+    probe picks k; traced or absent operands fall back to the static
+    mantissa-coverage plan.  Fixed-k configs just get the cost accounting
+    and kernel blocks.
+    """
+    beta = compute_beta(n)
+    group_ef = cfg.accumulate == "group_ef"
+    if not getattr(cfg, "auto_k", False):
+        return _plan_static(n, m, p, cfg.k, group_ef)
+    eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
+    mantissa = 53 if _bits_of(eps) > 22 else 24
+    if a is not None and hasattr(a, "dtype") \
+            and np.dtype(a.dtype) in _MANTISSA:
+        mantissa = _MANTISSA[np.dtype(a.dtype)]
+    gap_a = gap_b = None
+    probed = False
+    if a is not None and b is not None and _is_concrete(a) \
+            and _is_concrete(b):
+        gap_a = operand_gap_bits(a, axis=0)
+        gap_b = operand_gap_bits(b, axis=1)
+        probed = True
+    k = choose_k(n, beta, eps, split=cfg.split, mantissa=mantissa,
+                 m=m, p=p, gap_a=gap_a, gap_b=gap_b)
+    base = _plan_static(n, m, p, k, group_ef)
+    return dataclasses.replace(base, probed=probed)
+
+
+def auto_k(a, b, cfg) -> int:
+    """The planner's k for canonical batched operands
+    ``(*batch, m, n) @ (*batch, n, p)`` (the ``_bmm_impl`` entry shape)."""
+    m, n, p = a.shape[-2], a.shape[-1], b.shape[-1]
+    return plan_contraction(cfg, m, n, p, a=a, b=b).k
+
+
+def _is_concrete(x) -> bool:
+    """True when ``x`` holds actual values (not a jit/vmap tracer)."""
+    try:
+        import jax
+        return not isinstance(x, jax.core.Tracer)
+    except Exception:  # jax absent or jax.core layout drifted: duck-test
+        # (no np.asarray here — that would materialize the operand)
+        return not hasattr(x, "_trace")
+
+
+# ---------------------------------------------------------------------------
+# kernel block autotune table
+# ---------------------------------------------------------------------------
+
+# dim >= threshold -> preferred tile.  Sized for ~16 MB VMEM: an f32 input
+# tile (bm*bn*4), k<=16 int8 output slices (k*bm*bn), and a pair of f32
+# accumulator tiles (2*bm*bp*4) all fit at the largest entry.
+_TILE_TABLE = (
+    (4096, 512),
+    (1024, 256),
+    (0, 128),
+)
+
+
+def _preferred(dim: int) -> int:
+    for threshold, tile_ in _TILE_TABLE:
+        if dim >= threshold:
+            return tile_
+    return _TILE_TABLE[-1][1]
+
+
+@functools.lru_cache(maxsize=4096)
+def kernel_blocks(m: int, n: int, p: int = 1) -> Tuple[int, int, int]:
+    """Preferred ``(bm, bn, bp)`` Pallas tiles for a ``(m, n) @ (n, p)``
+    problem — the static-shape autotune table, cached per shape like the
+    jitted sharded entry.  Each kernel aligns its dims to its own hardware
+    multiple with :func:`tile` (8 sublanes for f32 rows, 128 lanes / MXU
+    edges elsewhere)."""
+    return (_preferred(m), _preferred(n), _preferred(p))
+
+
+def tile(dim: int, pref: int, mult: int) -> int:
+    """Align a preferred tile to a kernel's multiple, never exceeding the
+    (rounded-up) dim — small problems get one mult-sized tile rather than
+    a mostly-padding large one."""
+    if dim <= mult:
+        return mult
+    if dim < pref:
+        return min(pref, (dim + mult - 1) // mult * mult)
+    return max(mult, pref // mult * mult)
+
+
+def describe_config(cfg, m: int = 4096, n: int = 4096, p: int = 4096) -> str:
+    """One-line human plan summary for an engine config (launch logging)."""
+    pl = plan_contraction(cfg, m, n, p)
+    eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
+    kpart = (f"k=auto(target_eps={eps:.1e}, static {pl.k} @ n={n})"
+             if getattr(cfg, "auto_k", False) else f"k={cfg.k}")
+    fused = cfg.use_pallas == "fused"
+    return (f"{cfg.split}/{cfg.accumulate}:{cfg.accum_dtype} {kpart}, "
+            f"{'fused split+epilogue Pallas pipeline' if fused else 'pallas group-GEMM' if cfg.use_pallas else 'XLA path'}, "
+            f"{pl.int8_gemms} int8 GEMMs / {pl.highprec_adds} hp adds")

@@ -31,6 +31,14 @@ the digit extraction uses only power-of-two scalings, truncation/rounding to
 representable grids, and exact residual subtraction (Dekker).  No ``log2`` is
 evaluated — exponents come from ``frexp`` (the paper warns that log-based
 exponent computation "occasionally returns erroneous results").
+
+The geometric strategies (bitmask / rn_const) also exist as a one-HBM-pass
+Pallas kernel (``repro.kernels.split_fused``, wrapper
+``repro.kernels.ops.split_fused``) producing bit-identical digits and
+scales; ``OzimmuConfig.use_pallas == "fused"`` routes extraction through
+it.  The adaptive RN strategy cannot fuse — it re-derives the grid from
+each residual's row maxima, i.e. it *requires* the k extra passes that
+Alg. 8 exists to remove.
 """
 from __future__ import annotations
 
@@ -221,7 +229,6 @@ def split_rn(a: jax.Array, k: int, *, beta: Optional[int] = None,
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
-    dt = a.dtype
     grid_factor = 2.0 ** (1 - beta)
 
     r = a

@@ -20,7 +20,10 @@ last axis fastest); it DOES depend on the batch axis, so each batch element
 gets a fresh accumulator (init fires at g == kn == 0 for every b).
 
 MXU alignment: bm/bp multiples of 128, bn a multiple of 128 (int8 lane
-tiling is (32, 128); 128 keeps both operand tiles aligned).
+tiling is (32, 128); 128 keeps both operand tiles aligned).  Callers pick
+tiles from the planner's static-shape autotune table
+(``repro.core.plan.kernel_blocks`` via ``repro.kernels.ops.group_gemm``);
+the DEFAULT_* here are only the bare-kernel fallbacks.
 
 Rank-3 ``(G, m, n)`` operands are accepted as the unbatched special case.
 """

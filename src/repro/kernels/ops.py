@@ -1,7 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handles: padding to tile multiples, row-scale preparation, slice-pair
-stacking for group GEMMs, and the interpret-mode switch.
+stacking for group GEMMs, batch flattening onto the kernels' leading grid
+axis, and the interpret-mode switch.  Block sizes come from the planner's
+static-shape autotune table (``repro.core.plan.kernel_blocks``), aligned
+per kernel with ``plan.tile``.
 
 The ``INTERPRET`` module switch
 -------------------------------
@@ -20,12 +23,15 @@ earlier traces are cached per mode.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+import math
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.splitting import Split, _pow2_ceil, _pow2_floor, _rowmax
+from repro.core import plan
+from repro.core.splitting import (Split, _geo_scales, _pow2_ceil,
+                                  _pow2_floor, _rowmax)
 from repro.kernels import group_gemm as _gg
 from repro.kernels import scale_accum as _sa
 from repro.kernels import split_fused as _sf
@@ -44,46 +50,52 @@ def _pad_to(x: jax.Array, mults: Sequence[int]) -> jax.Array:
     return jnp.pad(x, pads)
 
 
-def _tile_for(dim: int, pref: int, mult: int) -> int:
-    """Largest tile <= pref that is a multiple of ``mult`` covering dim."""
-    if dim <= mult:
-        return mult
-    return min(pref, (dim + mult - 1) // mult * mult if dim < pref else pref)
-
-
 def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
-                axis: int = 0) -> Split:
+                axis: int = 0,
+                rowmax_reduce: Optional[Callable] = None) -> Split:
     """Pallas-accelerated splitting (Alg. 3 'bitmask' / Alg. 8 'rn_const').
 
-    Returns the same :class:`Split` contract as the pure-jnp splitters.
-    axis=1 (column scales, for B) is handled by transposing the *scale*
-    handling only — digits stay in the original orientation via a transposed
-    kernel launch.
+    Returns the same :class:`Split` contract as the pure-jnp splitters —
+    bit-identical digits and scales, in ``a``'s own dtype (f64 inputs stay
+    f64 through the interpret path; on TPU use f32).  ``a`` is
+    ``(*batch, m, n)``: splitting is row/column-local, so batch and row
+    dims flatten together onto the kernel grid.  axis=1 (column scales,
+    for B) transposes the trailing two axes in and out of the row kernel.
+    ``rowmax_reduce`` widens the row maxima before grids are derived
+    (the mesh-axis pmax hook) exactly as in the library splitters.
     """
-    a32 = a.astype(jnp.float32)
     if axis == 1:
-        sp = split_fused(a32.T, k, beta, mode=mode, axis=0)
-        return Split(jnp.swapaxes(sp.digits, 1, 2), sp.scale, sp.base,
+        sp = split_fused(jnp.swapaxes(a, -1, -2), k, beta, mode=mode,
+                         axis=0, rowmax_reduce=rowmax_reduce)
+        return Split(jnp.swapaxes(sp.digits, -1, -2), sp.scale, sp.base,
                      beta, 1)
-    rowmax = _rowmax(a32, 0)
+    rowmax = _rowmax(a, 0)                              # (*batch, m)
+    if rowmax_reduce is not None:
+        rowmax = rowmax_reduce(rowmax)
     if mode == "bitmask":
         base = 2.0 * _pow2_floor(rowmax)
         invgrid = (2.0 ** beta) / base  # 1/grid_1, grid_1 = base*2^-beta
-    else:
+    elif mode == "rn_const":
         mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
         base = mu * (2.0 ** beta)
         invgrid = 1.0 / mu
-    m, n = a32.shape
-    bm = _tile_for(m, _sf.DEFAULT_BM, 8)
-    bn = _tile_for(n, _sf.DEFAULT_BN, 128)
-    a_p = _pad_to(a32, (bm, bn))
-    inv_p = _pad_to(invgrid[:, None], (bm, 1))
+    else:
+        raise ValueError(f"fused splitting supports bitmask/rn_const, "
+                         f"got {mode!r}")
+    batch = a.shape[:-2]
+    m, n = a.shape[-2:]
+    rows = math.prod(batch, start=m)
+    a2 = a.reshape((rows, n))
+    inv2 = invgrid.reshape((rows, 1))
+    bm_pref, bn_pref, _ = plan.kernel_blocks(rows, n)
+    bm = plan.tile(rows, bm_pref, 8)
+    bn = plan.tile(n, bn_pref, 128)
+    a_p = _pad_to(a2, (bm, bn))
+    inv_p = _pad_to(inv2, (bm, 1))
     digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=mode, bm=bm,
-                             bn=bn, interpret=INTERPRET)[:, :m, :n]
-    exps = jnp.asarray([2.0 ** (-beta * s) for s in range(1, k + 1)],
-                       jnp.float32)
-    scale = base[None, :] * exps[:, None]
-    return Split(digits, scale, base, beta, 0)
+                             bn=bn, interpret=INTERPRET)[:, :rows, :n]
+    digits = digits.reshape((k,) + batch + (m, n))
+    return Split(digits, _geo_scales(base, beta, k), base, beta, 0)
 
 
 def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
@@ -106,32 +118,71 @@ def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
     p = b8.shape[-1]
     a8 = jnp.moveaxis(a8, 0, -3).reshape((-1, G, m, n))
     b8 = jnp.moveaxis(b8, 0, -3).reshape((-1, G, n, p))
-    bm = _tile_for(m, _gg.DEFAULT_BM, 128)
-    bp = _tile_for(p, _gg.DEFAULT_BP, 128)
-    bn = _tile_for(n, _gg.DEFAULT_BN, 128)
+    bm_pref, bn_pref, bp_pref = plan.kernel_blocks(m, n, p)
+    bm = plan.tile(m, bm_pref, 128)
+    bn = plan.tile(n, bn_pref, 128)
+    bp = plan.tile(p, bp_pref, 128)
     a8 = _pad_to(a8, (1, 1, bm, bn))
     b8 = _pad_to(b8, (1, 1, bn, bp))
     out = _gg.group_gemm(a8, b8, bm=bm, bp=bp, bn=bn, interpret=INTERPRET)
     return out[:, :m, :p].reshape(batch + (m, p))
 
 
+def _epilogue_operands(p32: jax.Array, srow: jax.Array, scol: jax.Array,
+                       *accs: jax.Array):
+    """Flatten batch, pad to the planned tiles; returns padded operands,
+    the (bm, bp) tiles, and an unpad closure."""
+    batch = p32.shape[:-2]
+    m, p = p32.shape[-2:]
+    B = math.prod(batch, start=1)
+    bm_pref, bp_pref, _ = plan.kernel_blocks(m, p)
+    bm = plan.tile(m, bm_pref, 8)
+    bp = plan.tile(p, bp_pref, 128)
+    p32_p = _pad_to(p32.reshape((B, m, p)), (1, bm, bp))
+    srow_p = _pad_to(srow.reshape((B, m, 1)), (1, bm, 1))
+    scol_p = _pad_to(scol.reshape((B, 1, p)), (1, 1, bp))
+    accs_p = [_pad_to(c.reshape((B, m, p)), (1, bm, bp)) for c in accs]
+
+    def unpad(x):
+        return x[:, :m, :p].reshape(batch + (m, p))
+
+    return p32_p, srow_p, scol_p, accs_p, bm, bp, unpad
+
+
 def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,
                 c_hi: jax.Array, c_lo: jax.Array):
-    """Fused df32 epilogue; shapes (m,p), (m,), (p,), (m,p), (m,p)."""
-    m, p = p32.shape
-    bm = _tile_for(m, _sa.DEFAULT_BM, 8)
-    bp = _tile_for(p, _sa.DEFAULT_BP, 128)
-    pads = ((-m) % bm, (-p) % bp)
-    p32_p = _pad_to(p32, (bm, bp))
-    hi_p = _pad_to(c_hi, (bm, bp))
-    lo_p = _pad_to(c_lo, (bm, bp))
-    srow_p = _pad_to(srow[:, None], (bm, 1))
-    scol_p = _pad_to(scol[None, :], (1, bp))
-    hi, lo = _sa.scale_accum(p32_p, srow_p, scol_p, hi_p, lo_p, bm=bm, bp=bp,
-                             interpret=INTERPRET)
-    if pads == (0, 0):
-        return hi, lo
-    return hi[:m, :p], lo[:m, :p]
+    """Fused df32 epilogue; p32/c_hi/c_lo ``(*batch, m, p)``,
+    srow ``(*batch, m)``, scol ``(*batch, p)``."""
+    p32_p, srow_p, scol_p, (hi_p, lo_p), bm, bp, unpad = \
+        _epilogue_operands(p32, srow, scol, c_hi, c_lo)
+    hi, lo = _sa.scale_accum(p32_p, srow_p, scol_p, hi_p, lo_p, bm=bm,
+                             bp=bp, interpret=INTERPRET)
+    return unpad(hi), unpad(lo)
+
+
+def scale_accum_plain(p32: jax.Array, srow: jax.Array, scol: jax.Array,
+                      c: jax.Array):
+    """Fused plain-accumulator epilogue (f64/f32), batched like
+    :func:`scale_accum`."""
+    p32_p, srow_p, scol_p, (c_p,), bm, bp, unpad = \
+        _epilogue_operands(p32, srow, scol, c)
+    out = _sa.scale_accum_plain(p32_p, srow_p, scol_p, c_p, bm=bm, bp=bp,
+                                interpret=INTERPRET)
+    return unpad(out)
+
+
+def scale_accum_update(prod: jax.Array, srow: jax.Array, scol: jax.Array,
+                       acc):
+    """``scale_accum_fn`` hook for ``accumulate.matmul_naive`` /
+    ``matmul_group_ef``: one fused convert+scale+add epilogue step through
+    the Pallas kernel (df32 pair or plain accumulator, by ``acc``'s type).
+    Bit-identical to the inline jnp epilogue — see kernels/scale_accum.py.
+    """
+    from repro.core.accumulate import DF32  # local: avoid import cycle
+    if isinstance(acc, DF32):
+        hi, lo = scale_accum(prod, srow, scol, acc.hi, acc.lo)
+        return DF32(hi, lo)
+    return scale_accum_plain(prod, srow, scol, acc)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -32,20 +32,29 @@ def group_gemm_ref(a8: jax.Array, b8: jax.Array) -> jax.Array:
     return jnp.sum(prods, axis=0, dtype=jnp.int32)
 
 
+def _two_sum(a, b):
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
 def scale_accum_ref(p32, srow, scol, c_hi, c_lo):
-    """Oracle for kernels.scale_accum (df32 compensated accumulate)."""
+    """Oracle for kernels.scale_accum (df32 compensated accumulate) —
+    the exact ``accumulate._scale_accum_df32`` operation sequence."""
     p = p32
     p_hi = (p >> 8) << 8
     p_lo = p - p_hi
     x_hi = p_hi.astype(jnp.float32) * srow * scol
     x_lo = p_lo.astype(jnp.float32) * srow * scol
-    s = c_hi + x_hi
-    bb = s - c_hi
-    err = (c_hi - (s - bb)) + (x_hi - bb)
+    hi, err = _two_sum(c_hi, x_hi)
     lo = c_lo + err + x_lo
-    hi2 = s + lo
-    lo2 = lo - (hi2 - s)
-    return hi2, lo2
+    return _two_sum(hi, lo)
+
+
+def scale_accum_plain_ref(p32, srow, scol, c):
+    """Oracle for kernels.scale_accum_plain (plain f64/f32 accumulate)."""
+    return c + p32.astype(c.dtype) * srow * scol
 
 
 def flash_attention_ref(q, k, v, *, group=1, causal=True, window=None,

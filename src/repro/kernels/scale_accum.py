@@ -5,11 +5,24 @@ diagonal scalings, and an add — four HBM-bound element passes (this is the
 "accumulation in FP64" bar that costs 40-50 % of ozIMMU's runtime, Figs 2-3).
 This kernel fuses all of them into ONE pass:
 
-    C_hi, C_lo += two_sum(scale_row * float(P32) * scale_col * 2^e)
+    C_hi, C_lo += two_sum(scale_row * float(P32) * scale_col)
 
 with a double-float (hi, lo) accumulator carried in HBM and updated in VMEM
 (input_output_aliasing -> in-place).  One read of P32 + read/write of C per
-term instead of four.
+term instead of four.  Any per-term group exponent 2^e is folded into the
+row scale by the caller (powers of two — exact).
+
+Two accumulator modes, selected by which entry point is called:
+
+  * :func:`scale_accum`       — df32 (hi, lo) compensated accumulation.
+    The operation sequence is EXACTLY ``accumulate._scale_accum_df32``
+    (int32 low-8-bit split, scale, TwoSum, full TwoSum renormalization),
+    so the fused epilogue is bit-identical to the unfused jnp epilogue.
+  * :func:`scale_accum_plain` — plain f32/f64 accumulator (f64 interprets
+    on CPU; on TPU use df32), matching ``accumulate._scale_accum_plain``.
+
+Both are batched: a leading grid axis maps batch elements, with per-batch
+scale vectors — the same layout convention as ``kernels.group_gemm``.
 """
 from __future__ import annotations
 
@@ -23,28 +36,47 @@ DEFAULT_BM = 256
 DEFAULT_BP = 512
 
 
+def _two_sum(a, b):
+    """Knuth TwoSum: a + b = s + e exactly (identical to accumulate's)."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
 def _scale_accum_kernel(p32_ref, srow_ref, scol_ref, hi_in_ref, lo_in_ref,
                         hi_ref, lo_ref):
-    """(bm, bp) tile: df32 accumulate the scaled int32 product."""
+    """(1, bm, bp) tile: df32 accumulate the scaled int32 product."""
     p = p32_ref[...]
     # exact int32 -> (hi, lo) f32 split via low-8-bit clear
     p_hi = (p >> 8) << 8
     p_lo = p - p_hi
-    srow = srow_ref[...]  # (bm, 1), power of two * 2^e folded in
-    scol = scol_ref[...]  # (1, bp), power of two
+    srow = srow_ref[...]  # (1, bm, 1), power of two (group 2^e folded in)
+    scol = scol_ref[...]  # (1, 1, bp), power of two
     x_hi = p_hi.astype(jnp.float32) * srow * scol
     x_lo = p_lo.astype(jnp.float32) * srow * scol
-    # TwoSum(c_hi, x_hi) then fold errors into lo
-    a = hi_in_ref[...]
-    s = a + x_hi
-    bb = s - a
-    err = (a - (s - bb)) + (x_hi - bb)
+    # the df32_add_df sequence: TwoSum the hi limbs, fold errors into lo,
+    # full-TwoSum renormalize (bit-identical to the jnp epilogue)
+    hi, err = _two_sum(hi_in_ref[...], x_hi)
     lo = lo_in_ref[...] + err + x_lo
-    # renormalize (fast two-sum)
-    hi2 = s + lo
-    lo2 = lo - (hi2 - s)
+    hi2, lo2 = _two_sum(hi, lo)
     hi_ref[...] = hi2
     lo_ref[...] = lo2
+
+
+def _scale_accum_plain_kernel(p32_ref, srow_ref, scol_ref, c_in_ref, c_ref):
+    """(1, bm, bp) tile: plain accumulate in c's dtype (f64 on CPU)."""
+    p = p32_ref[...]
+    c = c_in_ref[...]
+    c_ref[...] = c + p.astype(c.dtype) * srow_ref[...] * scol_ref[...]
+
+
+def _block_specs(bm: int, bp: int):
+    return [
+        pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j)),
+        pl.BlockSpec((1, bm, 1), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, 1, bp), lambda b, i, j: (b, 0, j)),
+    ]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
@@ -52,27 +84,54 @@ def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,
                 c_hi: jax.Array, c_lo: jax.Array, *, bm: int = DEFAULT_BM,
                 bp: int = DEFAULT_BP, interpret: bool = False):
     """(c_hi, c_lo) += srow * float(p32) * scol, compensated.  Returns new
-    (c_hi, c_lo); buffers are donated (aliased) so the update is in-place."""
-    m, p = p32.shape
+    (c_hi, c_lo); buffers are donated (aliased) so the update is in-place.
+
+    p32 (B, m, p) int32; srow (B, m, 1); scol (B, 1, p); c_hi/c_lo
+    (B, m, p) f32.  Rank-2 operands are accepted as the B=1 special case.
+    """
+    if p32.ndim == 2:
+        hi, lo = scale_accum(p32[None], srow[None], scol[None], c_hi[None],
+                             c_lo[None], bm=bm, bp=bp, interpret=interpret)
+        return hi[0], lo[0]
+    B, m, p = p32.shape
     assert m % bm == 0 and p % bp == 0, (p32.shape, bm, bp)
-    assert srow.shape == (m, 1) and scol.shape == (1, p)
-    grid = (m // bm, p // bp)
+    assert srow.shape == (B, m, 1) and scol.shape == (B, 1, p), \
+        (srow.shape, scol.shape)
+    grid = (B, m // bm, p // bp)
+    out_spec = pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j))
     return pl.pallas_call(
         _scale_accum_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, bp), lambda i, j: (0, j)),
-            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((m, p), jnp.float32),
-                   jax.ShapeDtypeStruct((m, p), jnp.float32)],
+        in_specs=_block_specs(bm, bp) + [out_spec, out_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, m, p), jnp.float32),
+                   jax.ShapeDtypeStruct((B, m, p), jnp.float32)],
         input_output_aliases={3: 0, 4: 1},
         interpret=interpret,
     )(p32, srow, scol, c_hi, c_lo)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
+def scale_accum_plain(p32: jax.Array, srow: jax.Array, scol: jax.Array,
+                      c: jax.Array, *, bm: int = DEFAULT_BM,
+                      bp: int = DEFAULT_BP, interpret: bool = False):
+    """c += srow * float(p32) * scol in ``c.dtype`` (plain accumulator);
+    same batched layout and aliasing contract as :func:`scale_accum`."""
+    if p32.ndim == 2:
+        return scale_accum_plain(p32[None], srow[None], scol[None], c[None],
+                                 bm=bm, bp=bp, interpret=interpret)[0]
+    B, m, p = p32.shape
+    assert m % bm == 0 and p % bp == 0, (p32.shape, bm, bp)
+    assert srow.shape == (B, m, 1) and scol.shape == (B, 1, p), \
+        (srow.shape, scol.shape)
+    grid = (B, m // bm, p // bp)
+    out_spec = pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j))
+    return pl.pallas_call(
+        _scale_accum_plain_kernel,
+        grid=grid,
+        in_specs=_block_specs(bm, bp) + [out_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, p), c.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(p32, srow, scol, c)

@@ -32,13 +32,14 @@ def _split_kernel(a_ref, invgrid_ref, out_ref, *, k: int, beta: int,
                   mode: str):
     """Extract k slices of one (bm, bn) tile.
 
-    a_ref:       (bm, bn) f32 — input tile
-    invgrid_ref: (bm, 1)  f32 — 1 / grid_1 per row (power of two)
+    a_ref:       (bm, bn) float — input tile (f32 on TPU; the interpret
+                 path also runs f64 for the paper-faithful DGEMM emulation)
+    invgrid_ref: (bm, 1)  float — 1 / grid_1 per row (power of two)
     out_ref:     (k, bm, bn) int8 — slice digits
     """
     a = a_ref[...]
     inv = invgrid_ref[...]  # (bm, 1)
-    two_beta = jnp.float32(2.0 ** beta)
+    two_beta = jnp.asarray(2.0 ** beta, a.dtype)
     # Normalize so slice-1 digits are the integer part (scale is a power of
     # two: exact).
     r = a * inv

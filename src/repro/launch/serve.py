@@ -77,8 +77,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--engine", "--matmul_engine", dest="engine",
                     default="bf16",
-                    help="matmul engine spec, e.g. bf16 or "
-                         "ozimmu_h-8:df32@model (docs/engine.md)")
+                    help="matmul engine spec, e.g. bf16, ozimmu_h-8:df32@model "
+                         "or ozimmu_h-auto:df32:fused (auto-k planner + fused "
+                         "Pallas pipeline; docs/engine.md)")
     ap.add_argument("--mesh", default=None,
                     help="mesh spec: 'data=2,model=4', 'single_pod', "
                          "'multi_pod'; default no mesh (single device)")
@@ -90,6 +91,11 @@ def main(argv=None):
     mesh_ctx = (compat.set_mesh(mesh) if mesh is not None
                 else contextlib.nullcontext())
     cfg = configs.get_config(args.arch, smoke=True, engine_spec=args.engine)
+    oz_cfg = cfg.engine.ozimmu_config
+    if oz_cfg is not None:
+        from repro.core import plan
+        print(f"[serve] engine {args.engine}: "
+              f"{plan.describe_config(oz_cfg, cfg.d_model, cfg.d_model, cfg.d_model)}")
     with mesh_ctx, use_rules(rules):
         model = api.get_model(cfg)
         params, _ = model.init(jax.random.PRNGKey(0), cfg)

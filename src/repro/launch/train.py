@@ -38,6 +38,11 @@ def train(arch: str, *, smoke: bool = True, n_steps: int = 100,
           mesh=None, seed: int = 0, log_every: int = 10,
           lr: float = 3e-3, print_fn=print):
     cfg = configs.get_config(arch, smoke=smoke, engine_spec=engine)
+    oz_cfg = cfg.engine.ozimmu_config
+    if oz_cfg is not None:
+        from repro.core import plan
+        print_fn(f"[train] engine {engine}: "
+                 f"{plan.describe_config(oz_cfg, cfg.d_model, cfg.d_model, cfg.d_model)}")
     model = api.get_model(cfg)
     opt_cfg = optim.OptConfig(lr=lr, warmup_steps=min(20, n_steps // 5 + 1),
                               total_steps=n_steps)
@@ -104,8 +109,9 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--engine", "--matmul_engine", dest="engine",
                     default="bf16",
-                    help="matmul engine spec, e.g. bf16 or "
-                         "ozimmu_h-8:df32@model (docs/engine.md)")
+                    help="matmul engine spec, e.g. bf16, ozimmu_h-8:df32@model "
+                         "or ozimmu_h-auto:df32:fused (auto-k planner + fused "
+                         "Pallas pipeline; docs/engine.md)")
     ap.add_argument("--mesh", default=None,
                     help="mesh spec: 'data=2,model=4', 'single_pod', "
                          "'multi_pod'; default no mesh (single device)")

@@ -395,6 +395,44 @@ def test_ozimmu_sharded_vjp_bitwise():
     """)
 
 
+def test_ozimmu_sharded_fused_pipeline_bitwise():
+    """The fused Pallas pipeline (``:fused``) composes with the mesh-native
+    path: under the exact-int32 reduction the sharded fused emulation is
+    bit-identical to the single-device fused AND unfused paths, for all
+    four variants (the acceptance invariant of the fused pipeline)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(0)
+        def phi_mat(m, n, phi=1.0):
+            u = rng.uniform(0, 1, (m, n)); z = rng.standard_normal((m, n))
+            return (u - 0.5) * np.exp(phi * z)
+
+        a = jnp.asarray(phi_mat(48, 256), jnp.float32)
+        b = jnp.asarray(phi_mat(256, 64), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+            for accum in ("f32", "df32"):
+                cfg = ozimmu.VARIANTS[name].with_(
+                    k=6, accum_dtype=accum, use_pallas="fused")
+                unfused = ozimmu.ozimmu_dot_general(
+                    a, b, dn, cfg.with_(use_pallas=False))
+                fused = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+                assert bool(jnp.all(unfused == fused)), (name, accum)
+                sharded = cfg.with_(mesh_axis="model")
+                with set_mesh(mesh):
+                    got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                        a, b, dn, sharded))(a, b)
+                assert bool(jnp.all(fused == got)), (name, accum)
+                print(name, accum, "fused sharded bitwise OK")
+        print("OK")
+    """)
+
+
 def test_psum_df32_error_free_vs_plain_f32():
     """The compensated DF32 reduction keeps what a plain f32 psum rounds
     away: partials engineered so small terms vanish under f32 summation."""

@@ -26,8 +26,9 @@ IGNORE = {
     "ozimmu_roofline", "ozimmu_h_k8",
 }
 # a candidate spec: spec charset only, no brackets/dots/parens (those mark
-# grammar templates like `ozimmu[-k]` or code references)
-CANDIDATE = re.compile(r"^ozimmu[a-z0-9_]*(-[0-9]+)?(:[a-z0-9_]+)?"
+# grammar templates like `ozimmu[-k]` or code references).  k is digits or
+# `auto`; `:opt` repeats (accumulator dtype and/or `fused`).
+CANDIDATE = re.compile(r"^ozimmu[a-z0-9_]*(-([0-9]+|auto))?(:[a-z0-9_]+)*"
                        r"(@[a-z0-9_]+(/[a-z0-9_]+)?)?$")
 BACKTICKED = re.compile(r"`([^`\n]+)`")
 
@@ -58,7 +59,8 @@ def test_docs_quote_enough_specs():
     """The extractor still sees the documented examples (guards against a
     silent regex/doc-layout change gutting this check)."""
     specs = {s for _, s in SPECS}
-    assert {"ozimmu_h-8", "ozimmu_h-8:df32@model"} <= specs, specs
+    assert {"ozimmu_h-8", "ozimmu_h-8:df32@model",
+            "ozimmu_h-auto:df32:fused"} <= specs, specs
     assert len(specs) >= 6, specs
 
 

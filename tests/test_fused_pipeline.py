@@ -1,0 +1,209 @@
+"""Fused Pallas emulation pipeline (``use_pallas="fused"``) and the
+accuracy-driven execution planner (``core/plan.py``, spec token ``auto``).
+
+The fused pipeline's contract is BIT-identity with the unfused XLA path:
+every stage (fused split, Pallas group GEMM, fused convert+scale+add
+epilogue) performs the same exact/compensated operation sequence, so the
+whole emulation — forward, VJP, batched, sharded — must produce the same
+bits.  The planner's contract is that ``auto`` never picks a k whose
+measured error (vs the double-double oracle) exceeds ``target_eps`` on the
+bench accuracy grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.exact import dd_matmul, max_relative_error
+from repro.core import (VARIANTS, make_engine, ozimmu_dot_general,
+                        ozimmu_matmul, parse_spec)
+from repro.core import plan
+from repro.core.splitting import compute_beta
+from tests.conftest import make_phi_matrix
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-unfused bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", list(VARIANTS))
+@pytest.mark.parametrize("accum", ["f64", "f32", "df32"])
+def test_fused_bit_identical_all_variants(rng, variant, accum):
+    """All four paper variants, every accumulator, odd (non-multiple-of-
+    block) shapes: the fused pipeline returns the same bits."""
+    a = jnp.asarray(make_phi_matrix(rng, 33, 130, phi=1.0))
+    b = jnp.asarray(make_phi_matrix(rng, 130, 17, phi=1.0))
+    cfg = VARIANTS[variant].with_(k=6, accum_dtype=accum)
+    c_ref = np.asarray(ozimmu_matmul(a, b, cfg))
+    c_fused = np.asarray(ozimmu_matmul(a, b, cfg.with_(use_pallas="fused")))
+    np.testing.assert_array_equal(c_fused, c_ref)
+
+
+def test_fused_bit_identical_f32_inputs(rng):
+    a = jnp.asarray(make_phi_matrix(rng, 48, 160, dtype=np.float32))
+    b = jnp.asarray(make_phi_matrix(rng, 160, 40, dtype=np.float32))
+    for variant in VARIANTS:
+        cfg = VARIANTS[variant].with_(k=5, accum_dtype="df32")
+        c_ref = np.asarray(ozimmu_matmul(a, b, cfg))
+        c_fused = np.asarray(ozimmu_matmul(a, b,
+                                           cfg.with_(use_pallas="fused")))
+        np.testing.assert_array_equal(c_fused, c_ref, err_msg=variant)
+
+
+def test_fused_bit_identical_batched_dot_general(rng):
+    """Batch dims ride the kernels' batch grid axes: an attention-score-like
+    contraction is bit-identical fused vs unfused."""
+    q = jnp.asarray(make_phi_matrix(rng, 4 * 12, 64,
+                                    dtype=np.float32).reshape(4, 12, 64))
+    k = jnp.asarray(make_phi_matrix(rng, 4 * 10, 64,
+                                    dtype=np.float32).reshape(4, 10, 64))
+    dn = (((2,), (2,)), ((0,), (0,)))
+    for accum in ("f32", "df32"):
+        cfg = VARIANTS["ozimmu_h"].with_(k=5, accum_dtype=accum)
+        ref = np.asarray(ozimmu_dot_general(q, k, dn, cfg))
+        fused = np.asarray(ozimmu_dot_general(
+            q, k, dn, cfg.with_(use_pallas="fused")))
+        np.testing.assert_array_equal(fused, ref)
+
+
+def test_fused_vjp_bit_identical(rng):
+    """Gradients flow through the same emulated cotangent contractions:
+    fused and unfused backward passes agree bit for bit."""
+    a = jnp.asarray(make_phi_matrix(rng, 24, 96))
+    b = jnp.asarray(make_phi_matrix(rng, 96, 16))
+    cfg = VARIANTS["ozimmu_h"].with_(k=6)
+
+    def loss(cfg):
+        return lambda a, b: jnp.sum(jnp.sin(ozimmu_matmul(a, b, cfg)))
+
+    ga, gb = jax.grad(loss(cfg), argnums=(0, 1))(a, b)
+    fa, fb = jax.grad(loss(cfg.with_(use_pallas="fused")),
+                      argnums=(0, 1))(a, b)
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(ga))
+    np.testing.assert_array_equal(np.asarray(fb), np.asarray(gb))
+
+
+def test_fused_under_jit(rng):
+    a = jnp.asarray(make_phi_matrix(rng, 16, 64, dtype=np.float32))
+    b = jnp.asarray(make_phi_matrix(rng, 64, 24, dtype=np.float32))
+    cfg = VARIANTS["ozimmu_ef"].with_(k=5, accum_dtype="df32",
+                                      use_pallas="fused")
+    eager = np.asarray(ozimmu_matmul(a, b, cfg))
+    jitted = np.asarray(jax.jit(
+        lambda a, b: ozimmu_matmul(a, b, cfg))(a, b))
+    np.testing.assert_array_equal(jitted, eager)
+
+
+# ---------------------------------------------------------------------------
+# spec grammar: `auto` k token, `:fused`
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_new_tokens():
+    cfg = parse_spec("ozimmu_h-auto:df32:fused@model")
+    assert cfg.auto_k and cfg.use_pallas == "fused"
+    assert cfg.accum_dtype == "df32" and cfg.mesh_axis == "model"
+    assert parse_spec("ozimmu_h-auto").auto_k
+    assert parse_spec("ozimmu_ef-8:fused").use_pallas == "fused"
+    assert parse_spec("ozimmu_ef-8:fused").accum_dtype == "f64"
+    assert parse_spec("ozimmu_h-8:fused:df32").accum_dtype == "df32"
+    assert not parse_spec("ozimmu_h-8:df32").auto_k
+    for bad in ("ozimmu_h-auto:fused:bogus", "ozimmu_h-8:f32:df32",
+                "ozimmu_h-8:fused:fused", "ozimmu_h-au", "bf16:fused"):
+        with pytest.raises(ValueError):
+            make_engine(bad)
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+def test_auto_k_meets_target_eps_on_bench_grid(rng):
+    """Acceptance: `auto` never selects a k whose measured error (dd
+    oracle) exceeds target_eps, across the bench accuracy grid."""
+    n = 128
+    eps = plan.DEFAULT_TARGET_EPS
+    for phi in (0.5, 2.0):
+        a = make_phi_matrix(rng, n, n, phi=phi)
+        b = make_phi_matrix(rng, n, n, phi=phi)
+        hi, lo = dd_matmul(a, b)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for variant in VARIANTS:
+            cfg = VARIANTS[variant].with_(auto_k=True)
+            k = plan.auto_k(aj, bj, cfg)
+            c = np.asarray(ozimmu_matmul(aj, bj, cfg))
+            err = max_relative_error(c, hi, lo)
+            assert err <= eps, (variant, phi, k, err)
+            assert plan.K_MIN <= k <= plan.K_MAX
+
+
+def test_auto_k_respects_custom_target_eps(rng):
+    """A looser target picks a smaller (or equal) k; the measured error
+    still meets the loosened target."""
+    n = 96
+    a = make_phi_matrix(rng, n, n, phi=1.0)
+    b = make_phi_matrix(rng, n, n, phi=1.0)
+    hi, lo = dd_matmul(a, b)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    cfg_tight = VARIANTS["ozimmu_h"].with_(auto_k=True)
+    cfg_loose = cfg_tight.with_(target_eps=1e-6)
+    k_tight = plan.auto_k(aj, bj, cfg_tight)
+    k_loose = plan.auto_k(aj, bj, cfg_loose)
+    assert k_loose <= k_tight
+    c = np.asarray(ozimmu_matmul(aj, bj, cfg_loose))
+    assert max_relative_error(c, hi, lo) <= 1e-6
+
+
+def test_auto_k_static_fallback_inside_jit(rng):
+    """Traced operands cannot be probed: the planner resolves to the
+    deterministic mantissa-coverage plan and the contraction still runs."""
+    a = jnp.asarray(make_phi_matrix(rng, 32, 128))
+    b = jnp.asarray(make_phi_matrix(rng, 128, 16))
+    cfg = VARIANTS["ozimmu_h"].with_(auto_k=True, use_pallas="fused")
+    out = jax.jit(lambda a, b: ozimmu_matmul(a, b, cfg))(a, b)
+    beta = compute_beta(128)
+    k_static = plan.choose_k(128, beta, plan.DEFAULT_TARGET_EPS,
+                             split="rn_const", mantissa=53)
+    # the static plan covers the f64 mantissa + carry guard
+    assert k_static * beta >= 53
+    ref = np.asarray(a.astype(jnp.float64) @ b.astype(jnp.float64))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-13)
+
+
+def test_plan_cost_accounting_reuses_paper_formulas():
+    """Plan.int8_gemms / highprec_adds are the paper's own accounting
+    (k(k+1)/2 fast-mode pairs; num_highprec_adds for step iv)."""
+    cfg = VARIANTS["ozimmu_h"].with_(k=8)
+    pl = plan.plan_contraction(cfg, 256, 256, 256)
+    assert pl.int8_gemms == 8 * 9 // 2
+    assert pl.highprec_adds == 8          # group-EF: one add per group
+    cfg_naive = VARIANTS["ozimmu"].with_(k=8, accumulate="naive")
+    pl_naive = plan.plan_contraction(cfg_naive, 256, 256, 256)
+    assert pl_naive.highprec_adds == 36   # k(k+1)/2
+    assert pl.describe()
+
+
+def test_kernel_blocks_table():
+    """The autotune table: aligned, monotone with problem size, cached."""
+    small = plan.kernel_blocks(64, 128, 64)
+    large = plan.kernel_blocks(8192, 8192, 8192)
+    assert all(b % 128 == 0 for b in small + large)
+    assert all(s <= l for s, l in zip(small, large))
+    assert plan.kernel_blocks(64, 128, 64) is small  # lru-cached
+    # tile alignment: never exceeds the rounded-up dim, honors multiples
+    assert plan.tile(8, 256, 8) == 8
+    assert plan.tile(100, 256, 8) == 104
+    assert plan.tile(1000, 256, 128) == 256
+
+
+def test_engine_auto_fused_spec_end_to_end(rng):
+    """`ozimmu_h-auto:df32:fused` through MatmulEngine — the full
+    spec-to-contraction path models use."""
+    eng = make_engine("ozimmu_h-auto:df32:fused")
+    x = jnp.asarray(make_phi_matrix(rng, 6 * 8, 64,
+                                    dtype=np.float32).reshape(6, 8, 64))
+    w = jnp.asarray(make_phi_matrix(rng, 64, 32, dtype=np.float32))
+    out = eng(x, w)
+    ref = np.asarray(jnp.einsum("abi,ij->abj", x.astype(jnp.float64),
+                                w.astype(jnp.float64)))
+    rel = np.abs(np.asarray(out, np.float64) - ref) / (np.abs(ref) + 1e-6)
+    assert rel.max() < 5e-5

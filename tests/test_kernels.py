@@ -144,6 +144,65 @@ def test_scale_accum_matches_ref(rng, m, p):
     np.testing.assert_array_equal(np.asarray(lo), np.asarray(wlo))
 
 
+@pytest.mark.parametrize("batch", [(3,), (2, 2)])
+def test_scale_accum_batched_matches_ref(rng, batch):
+    """Leading batch dims map onto the kernel's batch grid axis with
+    per-batch scale vectors."""
+    m, p = 24, 140
+    p32 = jnp.asarray(rng.integers(-2**30, 2**30, batch + (m, p)), jnp.int32)
+    srow = jnp.asarray(2.0 ** rng.integers(-10, 10, batch + (m,)), jnp.float32)
+    scol = jnp.asarray(2.0 ** rng.integers(-10, 10, batch + (p,)), jnp.float32)
+    c_hi = jnp.asarray(rng.standard_normal(batch + (m, p)), jnp.float32)
+    c_lo = jnp.asarray(rng.standard_normal(batch + (m, p)) * 1e-7, jnp.float32)
+    hi, lo = ops.scale_accum(p32, srow, scol, c_hi, c_lo)
+    whi, wlo = ref.scale_accum_ref(p32, srow[..., :, None],
+                                   scol[..., None, :], c_hi, c_lo)
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(whi))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(wlo))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("m,p", [(8, 128), (100, 300)])
+def test_scale_accum_plain_matches_ref(rng, dtype, m, p):
+    """The plain-accumulator kernel mode (f64 interpret / f32) equals the
+    inline epilogue in the accumulator's own dtype."""
+    p32 = jnp.asarray(rng.integers(-2**30, 2**30, (m, p)), jnp.int32)
+    srow = jnp.asarray(2.0 ** rng.integers(-20, 20, (m,)), dtype)
+    scol = jnp.asarray(2.0 ** rng.integers(-20, 20, (p,)), dtype)
+    c = jnp.asarray(rng.standard_normal((m, p)), dtype)
+    got = ops.scale_accum_plain(p32, srow, scol, c)
+    want = ref.scale_accum_plain_ref(p32, srow[:, None], scol[None, :], c)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode,lib", [("bitmask", split_bitmask),
+                                      ("rn_const", split_rn_const)])
+def test_split_fused_f64_and_batched_matches_library(rng, mode, lib):
+    """The fused splitter preserves f64 through the interpret path (the
+    paper-faithful DGEMM emulation needs digits beyond f32's 24 bits) and
+    flattens batch dims without changing any digit."""
+    a64 = jnp.asarray(make_phi_matrix(rng, 40, 96, dtype=np.float64))
+    k, beta = 9, 7  # k*beta = 63 bits > f32 mantissa: catches an f32 cast
+    for axis in (0, 1):
+        sp_k = ops.split_fused(a64, k, beta, mode=mode, axis=axis)
+        sp_l = lib(a64, k, beta=beta, axis=axis)
+        assert sp_k.digits.dtype == jnp.int8 and sp_k.scale.dtype == a64.dtype
+        np.testing.assert_array_equal(np.asarray(sp_k.digits),
+                                      np.asarray(sp_l.digits))
+        np.testing.assert_array_equal(np.asarray(sp_k.scale),
+                                      np.asarray(sp_l.scale))
+    ab = jnp.asarray(make_phi_matrix(rng, 6 * 20, 64,
+                                     dtype=np.float32).reshape(2, 3, 20, 64))
+    for axis in (0, 1):
+        sp_k = ops.split_fused(ab, 5, beta, mode=mode, axis=axis)
+        sp_l = lib(ab, 5, beta=beta, axis=axis)
+        np.testing.assert_array_equal(np.asarray(sp_k.digits),
+                                      np.asarray(sp_l.digits))
+        np.testing.assert_array_equal(np.asarray(sp_k.scale),
+                                      np.asarray(sp_l.scale))
+
+
 def test_scale_accum_compensation_beats_naive(rng):
     """df32 accumulation keeps bits a plain f32 accumulator loses."""
     m = p = 8
