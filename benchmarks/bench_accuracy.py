@@ -17,7 +17,16 @@ import jax.numpy as jnp
 from benchmarks.exact import dd_matmul, max_relative_error
 from repro.core import ozimmu
 
-VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h")
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+            "oz2_b", "oz2_h", "oz2_h_fast")
+
+
+def variant_cfg(variant: str, k: int):
+    """Bench variant label -> config; the ``_fast`` suffix selects the
+    oz2 diagonal-band mode."""
+    fast = variant.endswith("_fast")
+    name = variant[:-5] if fast else variant
+    return ozimmu.VARIANTS[name].with_(k=k, fast=fast)
 
 
 def make_phi_matrix(rng, m, n, phi):
@@ -44,7 +53,7 @@ def run(n: int = 256, ks=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12),
             print(f"phi={phi:4.1f}  fp64          err={err64:9.2e}")
         for k in ks:
             for variant in VARIANTS:
-                cfg = ozimmu.VARIANTS[variant].with_(k=k)
+                cfg = variant_cfg(variant, k)
                 c = np.asarray(ozimmu.ozimmu_matmul(aj, bj, cfg))
                 err = max_relative_error(c, hi, lo)
                 rows.append({"phi": phi, "variant": variant, "k": k,

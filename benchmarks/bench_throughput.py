@@ -11,7 +11,7 @@ import json
 
 from benchmarks.model_v5e import emulated_tflops
 
-VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h")
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h", "oz2_h_fast")
 
 
 def run(ns=(1024, 2048, 4096, 8192, 16384), ks=(3, 7, 8, 12)):

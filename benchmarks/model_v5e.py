@@ -17,8 +17,17 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.accumulate import num_highprec_adds
-from repro.core.splitting import compute_beta, compute_r
+from repro.core.accumulate import (num_highprec_adds, oz2_num_chunks,
+                                   oz2_num_highprec_adds, oz2_num_pairs)
+from repro.core.splitting import compute_beta, compute_r, digit_bits
+
+
+def variant_split(variant: str) -> str:
+    """Bench variant label (e.g. ``oz2_h_fast``) -> splitting strategy
+    name, via the engine's own variant table — single source of truth."""
+    from repro.core.ozimmu import VARIANTS
+    base = variant[:-5] if variant.endswith("_fast") else variant
+    return VARIANTS[base].split
 
 PEAK_INT8 = 394e12      # MACs*2 per second (ops/s)
 HBM_BW = 819e9
@@ -49,7 +58,8 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
                 fused_epilogue: bool = True) -> PhaseTimes:
     """Modeled seconds per phase on one v5e chip.
 
-    variant: ozimmu | ozimmu_rn | ozimmu_ef | ozimmu_h.
+    variant: ozimmu | ozimmu_rn | ozimmu_ef | ozimmu_h | oz2_b | oz2_h,
+    the oz2 names optionally suffixed ``_fast`` (the diagonal-band mode).
     fused_split: single-HBM-read fused extraction (our Pallas kernel);
     False models Ootomo-style per-slice passes.
     fused_epilogue: one-pass convert+scale+add with the accumulator RMW'd
@@ -57,7 +67,10 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     term per high-precision add (an extra write+read of the term).
     """
     beta = compute_beta(n)
-    r = compute_r(n, beta)
+    oz2 = variant.startswith("oz2")
+    oz2_fast = variant.endswith("_fast")
+    dbits = digit_bits(variant_split(variant), beta)
+    r = compute_r(n, beta, dbits) if oz2 else compute_r(n, beta)
     group_ef = variant in ("ozimmu_ef", "ozimmu_h")
     hp_b = _BYTES_HP[accum_dtype]
 
@@ -70,18 +83,32 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     split_bytes = (m * n + n * p) * (reads * in_bytes + k * 1)
     t_split = split_bytes / HBM_BW
 
-    # --- gemm: k(k+1)/2 int8 pair GEMMs (fast mode).  Group-EF performs the
-    # same MACs but fewer kernel launches (concatenated contraction) — MAC
-    # count identical, so same compute time; the win is in `accum`.
-    pairs = k * (k + 1) // 2
+    # --- gemm: k(k+1)/2 int8 pair GEMMs (fast mode; oz2 full mode runs all
+    # k^2).  Group-EF performs the same MACs but fewer kernel launches
+    # (concatenated contraction) — MAC count identical, so same compute
+    # time; the win is in `accum`.
+    pairs = oz2_num_pairs(k, oz2_fast) if oz2 else k * (k + 1) // 2
     t_gemm = pairs * 2.0 * m * n * p / PEAK_INT8
 
     # --- accum: per high-precision term, read int32 product (4B) + RMW of
     # the hp accumulator (2*hp_b) over (m, p); the unfused epilogue also
     # materializes the converted+scaled term (one write + one read of hp_b).
-    hp_terms = num_highprec_adds(k, r, group_ef)
-    per_term = (4 + 2 * hp_b) if fused_epilogue else (4 + 4 * hp_b)
-    accum_bytes = hp_terms * m * p * per_term
+    # oz2: one term per exponent-ladder window (the int64 shift-adds of the
+    # fold ride along in the same pass over the window's products).
+    # ladder word budget mirrors accumulate.matmul_oz2: int64 words (52
+    # bits, exact f64 convert) for the f64 accumulator, int32 otherwise
+    wbits = 52 if accum_dtype == "f64" else 31
+    hp_terms = (oz2_num_highprec_adds(k, r, beta, n, oz2_fast, dbits, wbits)
+                if oz2 else num_highprec_adds(k, r, group_ef))
+    if oz2:
+        # the ladder fold reads every chunk product once (int shift-adds),
+        # but the hp accumulator is RMW'd only once per window
+        reads_bytes = oz2_num_chunks(k, r, oz2_fast) * 4
+        rmw_bytes = hp_terms * (2 * hp_b if fused_epilogue else 4 * hp_b)
+        accum_bytes = m * p * (reads_bytes + rmw_bytes)
+    else:
+        per_term = (4 + 2 * hp_b) if fused_epilogue else (4 + 4 * hp_b)
+        accum_bytes = hp_terms * m * p * per_term
     t_accum = accum_bytes / HBM_BW
 
     # --- copy: C <- alpha D + beta C, one read+write of (m, p)

@@ -43,7 +43,9 @@ def _headline_accuracy(rows):
 
 
 def _headline_breakdown(rows):
-    """Accumulation-time shares and EF/H modeled speedups at one k."""
+    """Accumulation-time shares, EF/H/oz2 modeled speedups, and the Plan
+    cost accounting (int8 GEMMs / high-precision adds — where the oz2
+    exponent ladder's reduction shows up) at one k."""
     ks = sorted({r["k"] for r in rows})
     k = 8 if 8 in ks else ks[-1]
     at_k = [r for r in rows if r["k"] == k]
@@ -53,6 +55,9 @@ def _headline_breakdown(rows):
         "speedup_vs_ozimmu": {
             r["variant"]: r["speedup_vs_ozimmu"] for r in at_k
             if "speedup_vs_ozimmu" in r},
+        "cost": {r["variant"]: {"int8_gemms": r["int8_gemms"],
+                                "hp_adds": r["hp_adds"]}
+                 for r in at_k if "int8_gemms" in r},
     }
 
 

@@ -1,9 +1,11 @@
 """Core: the paper's contribution — Ozaki-scheme GEMM emulation on int8 MMUs."""
 from repro.core.splitting import (Split, compute_beta, compute_r,
                                   split_bitmask, split_rn, split_rn_const,
+                                  split_oz2, split_oz2_bitmask,
                                   reconstruct, residual)
 from repro.core.accumulate import (int8_gemm, matmul_naive, matmul_group_ef,
-                                   DF32, num_highprec_adds)
+                                   matmul_oz2, DF32, num_highprec_adds,
+                                   oz2_num_pairs, oz2_num_highprec_adds)
 from repro.core.plan import (DEFAULT_TARGET_EPS, Plan, plan_contraction,
                              kernel_blocks)
 from repro.core.ozimmu import (OzimmuConfig, VARIANTS, ozimmu_matmul,

@@ -1,5 +1,11 @@
 """Slice-product evaluation + accumulation for the Ozaki scheme.
 
+Three evaluation strategies — two from the source paper, plus the
+Ozaki-II constant-scaling path (``matmul_oz2``, see its docstring and
+docs/algorithms.md#ozaki-scheme-ii), which requires the shared-grid
+splits of ``splitting.split_oz2``/``split_oz2_bitmask`` and folds every
+slice-pair scale into one scalar exponent ladder per contraction.
+
 Two evaluation strategies from the paper:
 
   * ``matmul_naive``    — Alg. 4: one INT8 GEMM per slice pair (s, t) with
@@ -68,8 +74,13 @@ __all__ = [
     "int8_gemm",
     "matmul_naive",
     "matmul_group_ef",
+    "matmul_oz2",
     "DF32",
     "num_highprec_adds",
+    "oz2_num_pairs",
+    "oz2_num_highprec_adds",
+    "oz2_num_chunks",
+    "ladder_width",
 ]
 
 
@@ -321,3 +332,198 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
         e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
         c = fn(prod, base_a * e, base_b, c)
     return c if partial else c.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ozaki-II — constant scaling + exponent-ladder accumulation
+# ---------------------------------------------------------------------------
+
+def _clog2(x: int) -> int:
+    return max(0, (int(x) - 1).bit_length())
+
+
+def oz2_groups(k: int, fast: bool):
+    """Anti-diagonal group indices g = s + t evaluated by the oz2 modes.
+
+    Full mode keeps every group of the k x k pair square (g = 2..2k) — the
+    complete product of the two k-slice fixed-point approximations.  Fast
+    mode keeps the diagonal band g <= k + 1 only: on the shared grid the
+    dropped pairs all lie at least ``beta * k`` bits below the global
+    product magnitude, i.e. at the splitting-truncation level itself.
+    """
+    return range(2, (k + 1 if fast else 2 * k) + 1)
+
+
+def _oz2_group_pairs(k: int, g: int):
+    return [(s, g - s) for s in range(max(1, g - k), min(k, g - 1) + 1)]
+
+
+def oz2_num_pairs(k: int, fast: bool) -> int:
+    """INT8 slice-pair GEMM count: k(k+1)/2 (fast band) or k^2 (full)."""
+    return k * (k + 1) // 2 if fast else k * k
+
+
+def _oz2_chunks(k: int, r: int, fast: bool):
+    """Yield (g, [(s, t), ...]) chunks of size <= r, ascending g."""
+    for g in oz2_groups(k, fast):
+        pairs = _oz2_group_pairs(k, g)
+        for i in range(0, len(pairs), r):
+            yield g, pairs[i:i + r]
+
+
+def ladder_width(n: int, k: int, beta: int, digit_bits: int,
+                 word_bits: int) -> int:
+    """How many consecutive anti-diagonal groups fold into ONE integer word.
+
+    On the shared oz2 grid, group g's INT32 sum S_g carries the scalar
+    exponent 2^(-beta*g), so c consecutive groups combine exactly as
+
+        word = sum_j S_(g+j) << (beta * (c - 1 - j))
+
+    |S_g| <= k * n * (2^digit_bits)^2 per group, hence the word needs
+    ``clog2(k) + clog2(n) + 2*digit_bits + beta*(c-1) + 1`` bits.  The
+    budget ``word_bits`` is 52 for an int64 word that must convert to f64
+    exactly, 31 for an int32 word (the df32/f32 accumulators).
+    """
+    head = 1 + _clog2(k) + _clog2(n) + 2 * digit_bits
+    return 1 + max(0, (word_bits - head) // beta)
+
+
+def _ladder_windows(chunks, c: int):
+    """Pack the ascending-g chunk list into windows spanning <= c groups."""
+    windows = []
+    for idx, (g, _) in enumerate(chunks):
+        if windows and g - windows[-1][0][1] < c:
+            windows[-1].append((idx, g))
+        else:
+            windows.append([(idx, g)])
+    return windows
+
+
+def oz2_num_highprec_adds(k: int, r: int, beta: int, n: int, fast: bool,
+                          digit_bits: int, word_bits: int = 52) -> int:
+    """High-precision adds of the oz2 path = number of ladder windows."""
+    chunks = list(_oz2_chunks(k, r, fast))
+    return len(_ladder_windows(chunks, ladder_width(n, k, beta, digit_bits,
+                                                    word_bits)))
+
+
+def oz2_num_chunks(k: int, r: int, fast: bool) -> int:
+    """INT32 group-GEMM outputs the ladder folds (perf-model accounting:
+    each is one product-tensor read in the accumulation pass)."""
+    return sum(1 for _ in _oz2_chunks(k, r, fast))
+
+
+def _oz2_scale(gbase_a: jax.Array, gbase_b: jax.Array, beta: int, g: int,
+               dtype) -> jax.Array:
+    """(*batch,) combined scalar scale ``gbaseA * gbaseB * 2^(-beta*g)``.
+
+    The group exponent is split evenly over the two bases before the
+    product so neither factor underflows on its own (2^(-beta*g) alone
+    leaves the f32 range for full-mode g at large k); every factor is a
+    power of two, so the arithmetic stays exact.
+    """
+    ea = jnp.asarray(2.0 ** (-beta * (g // 2)), dtype)
+    eb = jnp.asarray(2.0 ** (-beta * (g - g // 2)), dtype)
+    return (gbase_a.astype(dtype) * ea) * (gbase_b.astype(dtype) * eb)
+
+
+def _oz2_accum_df32(word: jax.Array, scale: jax.Array, acc: DF32) -> DF32:
+    """One ladder-window df32 step: ``acc += scale * float(word)`` with the
+    exact low-8-bit int32 split (word is int32 in df32 mode)."""
+    term = int32_to_df32(word)
+    s = scale[..., None, None]
+    return df32_add_df(acc, DF32(term.hi * s, term.lo * s))
+
+
+def _oz2_accum_plain(word: jax.Array, scale: jax.Array,
+                     acc: jax.Array) -> jax.Array:
+    """One ladder-window plain step in ``acc.dtype`` (f64: the int64 word
+    converts exactly by the ``word_bits <= 52`` budget)."""
+    return acc + word.astype(acc.dtype) * scale[..., None, None]
+
+
+def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
+               out_dtype=None, fast: bool = False, r: Optional[int] = None,
+               n_total: Optional[int] = None,
+               digit_bits: Optional[int] = None, group_gemm_fn=None,
+               partial: bool = False,
+               product_reduce: Optional[Callable] = None,
+               scale_accum_fn: Optional[Callable] = None
+               ) -> Union[jax.Array, DF32]:
+    """Ozaki-II evaluation on constant-scaling splits.
+
+    Needs ``Split.gbase`` (the scalar shared-grid base of
+    ``splitting.split_oz2`` / ``split_oz2_bitmask``).  Every slice pair in
+    anti-diagonal group g carries the SCALAR scale
+    ``gbaseA * gbaseB * 2^(-beta*g)``, so (i) groups are summed inside the
+    INT32 matmul unit exactly as in Alg. 6/7 (concat GEMMs, chunked by r),
+    and (ii) consecutive groups additionally fold into one integer word by
+    exact shifts — the exponent ladder — before a SINGLE high-precision
+    convert+scale+add per window (``ladder_width`` groups at a time).
+    Fast mode evaluates the g <= k+1 band (k(k+1)/2 pairs, the classic
+    count); full mode all k^2 pairs.
+
+    ``partial`` / ``product_reduce`` follow the module contract: the
+    product psum applies to the stacked int32 chunk products BEFORE the
+    ladder fold, so the int32 mesh strategy stays bit-identical.
+    ``scale_accum_fn(word, scale, acc)`` is the oz2 fused-epilogue hook
+    (``repro.kernels.ops.oz2_scale_accum_update``): ``word`` the folded
+    int32/int64 window, ``scale`` the ``(*batch,)`` scalar power of two.
+    ``digit_bits`` is the slice digit magnitude (beta for truncation
+    splits, beta - 1 for RN — sizes r and the ladder windows); ``n_total``
+    the GLOBAL contraction length when the operands are shards.
+    """
+    assert sa.axis == 0 and sb.axis == 1
+    if sa.gbase is None or sb.gbase is None:
+        raise ValueError("oz2 accumulation needs constant-scaling splits "
+                         "(split_oz2 / split_oz2_bitmask); got per-row "
+                         "scales")
+    k = sa.digits.shape[0]
+    assert sb.digits.shape[0] == k
+    beta = sa.beta
+    n = n_total if n_total is not None else sa.digits.shape[-1]
+    out_shape = sa.digits.shape[1:-1] + (sb.digits.shape[-1],)
+    out_dtype = out_dtype or sa.scale.dtype
+    if digit_bits is None:
+        digit_bits = beta  # conservative: truncation digits span ±(2^beta-1)
+    if r is None:
+        r = compute_r(n, beta, digit_bits)
+    use_i64 = accum == "f64" and jax.config.jax_enable_x64
+    word_dtype = jnp.int64 if use_i64 else jnp.int32
+    word_bits = 52 if use_i64 else 31
+    c = ladder_width(n, k, beta, digit_bits, word_bits)
+
+    gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
+    chunks = list(_oz2_chunks(k, r, fast))
+    prods = _reduce_products([gg(pairs) for _, pairs in chunks],
+                             product_reduce)
+    windows = _ladder_windows(chunks, c)
+
+    def fold(window):
+        g_hi = window[-1][1]
+        word = None
+        for idx, g in window:
+            t = prods[idx].astype(word_dtype)
+            if g_hi != g:
+                t = jnp.left_shift(t, beta * (g_hi - g))
+            word = t if word is None else word + t
+        return word, g_hi
+
+    if accum == "df32":
+        fn = scale_accum_fn or _oz2_accum_df32
+        acc = df32_zero(out_shape)
+        for window in windows:
+            word, g_hi = fold(window)
+            acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi,
+                                      jnp.float32), acc)
+        return acc if partial else acc.to_float(out_dtype)
+
+    acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
+    fn = scale_accum_fn or _oz2_accum_plain
+    acc = jnp.zeros(out_shape, acc_dtype)
+    for window in windows:
+        word, g_hi = fold(window)
+        acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi, acc_dtype),
+                 acc)
+    return acc if partial else acc.astype(out_dtype)

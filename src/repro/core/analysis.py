@@ -18,6 +18,8 @@ __all__ = [
     "accumulation_terms_w",
     "error_bound_ozimmu",
     "error_bound_group_ef",
+    "error_bound_rn",
+    "error_bound_oz2",
     "flop_counts",
 ]
 
@@ -71,6 +73,85 @@ def error_bound_group_ef(a: np.ndarray, b: np.ndarray, k: int,
     beta = compute_beta(n)
     w = accumulation_terms_w(k, compute_r(n, beta))
     return truncation_bound(a, b, k) + max(w - 1, 0) * u * (np.abs(a) @ np.abs(b))
+
+
+def error_bound_rn(a: np.ndarray, b: np.ndarray, k: int,
+                   u: float | None = None) -> np.ndarray:
+    """Documented bound for the RN variants (ozIMMU_RN / ozIMMU_H).
+
+    Same shape as eq. (18) with the grid anchored at ``2^ceil(log2 max)``
+    (up to 2x the ufp anchor of the truncation variants) but only half-ulp
+    per-slice rounding; the naive k(k+1)/2 accumulation term dominates the
+    group-EF one, so one bound covers both.
+    """
+    u = u if u is not None else unit_roundoff(a.dtype)
+    n = a.shape[1]
+    beta = compute_beta(n)
+    tb = 4.0 * (k + 1) * n * 2.0 ** (-beta * k) * (2.0 * _gf(a, b))
+    return tb + (k * (k + 1) / 2) * u * (np.abs(a) @ np.abs(b))
+
+
+def _global_anchor(x: np.ndarray) -> float:
+    """A power of two >= max|x| (the oz2 shared-grid anchor; conservative
+    by at most 2x when max|x| is itself a power of two)."""
+    gmax = float(np.max(np.abs(x)))
+    if gmax == 0.0:
+        return 0.0
+    _, e = np.frexp(gmax)
+    return float(np.ldexp(1.0, int(e)))
+
+
+def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
+                    fast: bool = True, u: float | None = None,
+                    adds: int | None = None) -> np.ndarray:
+    """Documented elementwise bound for the oz2 (constant-scaling) modes.
+
+    With the shared grids anchored at ``EA = 2^ceil(log2 max|A|)`` (resp.
+    EB), the splitting truncations satisfy ``|V_A| <= 2 EA 2^(-beta k)``
+    elementwise (RN: half that), so
+
+        |AB - T| <= 4 * 2^(-beta k) * (EA * colsum|B| + rowsum|A| * EB
+                                       + n * EA * EB)        (truncation)
+                  + [fast] 8 k n 2^(-beta k) * EA * EB       (dropped g>k+1)
+                  + (adds - 1) u |A||B|
+                  + 4 adds n u EA EB                         (accumulation)
+
+    The last term is the conversion/rounding noise of the ladder-window
+    terms themselves: a slice product's elementwise magnitude is bounded
+    by ``n EA EB 2^(2 beta - beta g)`` — grid noise, NOT ``|A||B|`` — so
+    the running accumulator transiently holds O(n EA EB) and each window
+    add may round relative to that.  (Negligible for the f64/df32
+    accumulators; it is what dominates plain-f32 accumulation on
+    wide-spread operands.)
+
+    The anchors are GLOBAL: unlike eq. (18)'s per-row ``g f^T``, rows far
+    below the matrix maximum inherit the matrix-level absolute error — the
+    price of constant scaling, and exactly what the adversarial oracle
+    grid (tests/test_oracle.py) exercises.
+    """
+    u = u if u is not None else unit_roundoff(a.dtype)
+    n = a.shape[1]
+    beta = compute_beta(n)
+    ea, eb = _global_anchor(a), _global_anchor(b)
+    t = 2.0 ** (-beta * k)
+    colsum = np.sum(np.abs(b), axis=0)
+    rowsum = np.sum(np.abs(a), axis=1)
+    trunc = 4.0 * t * (ea * colsum[None, :] + rowsum[:, None] * eb
+                       + n * ea * eb)
+    dropped = 8.0 * k * n * t * ea * eb if fast else 0.0
+    if adds is None:
+        # conservative default: count the ladder windows of the WORST
+        # configuration — truncation digit bits (smaller r, more chunks)
+        # and the 31-bit int32 word (df32/f32 ladders, least folding) —
+        # so one bound covers oz2_b/oz2_h under every accumulator.  Pass
+        # the actual count for a tighter bound.
+        from repro.core.accumulate import oz2_num_highprec_adds
+        r = compute_r(n, beta, beta)
+        adds = oz2_num_highprec_adds(k, r, beta, n, fast, beta,
+                                     word_bits=31)
+    accum = (max(adds - 1, 0) * u * (np.abs(a) @ np.abs(b))
+             + 4.0 * adds * n * u * ea * eb)
+    return trunc + dropped + accum
 
 
 def flop_counts(m: int, n: int, p: int, k: int, *, group_ef: bool,

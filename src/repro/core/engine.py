@@ -10,6 +10,11 @@ Specs (CLI flag ``--matmul_engine``):
     picks the smallest slice count meeting ``OzimmuConfig.target_eps``
     from the operands' probed exponent ranges (eager calls) or the
     static mantissa-coverage plan (inside jit).
+  * ``oz2_b[-k]``, ``oz2_h[-k]`` optionally ``:fast`` — Ozaki-II
+    constant-scaling emulation: one shared digit grid per matrix, all
+    slice-pair scales folded into a scalar exponent ladder
+    (``core/accumulate.matmul_oz2``); ``:fast`` evaluates only the
+    s + t <= k + 1 band.  Auto-k plans against the OS-II error model.
   * ``...:fused``                     — the one-HBM-pass Pallas pipeline:
     fused k-slice extraction, VMEM-resident group GEMMs, and the fused
     convert+scale+add epilogue; bit-identical to the XLA path and

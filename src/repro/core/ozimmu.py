@@ -1,15 +1,26 @@
 """Public API: high-precision GEMM emulation on integer matmul units.
 
-The four named method variants of the paper:
+The four named method variants of the paper, plus the two Ozaki-II
+constant-scaling variants (see docs/algorithms.md#ozaki-scheme-ii):
 
-  =============  ==============  =====================  ====================
-  name           splitting       accumulation           paper
-  =============  ==============  =====================  ====================
-  ``ozimmu``     bitmask (Alg3)  naive (Alg4)           Ootomo et al. (base)
-  ``ozimmu_rn``  RN adapt (Alg5) naive (Alg4)           proposed §3.1
-  ``ozimmu_ef``  bitmask (Alg3)  group-EF (Alg6/7)      proposed §3.2
-  ``ozimmu_h``   RN const (Alg8) group-EF (Alg6/7)      proposed §3.3
-  =============  ==============  =====================  ====================
+  =============  ================  =====================  ====================
+  name           splitting         accumulation           paper
+  =============  ================  =====================  ====================
+  ``ozimmu``     bitmask (Alg3)    naive (Alg4)           Ootomo et al. (base)
+  ``ozimmu_rn``  RN adapt (Alg5)   naive (Alg4)           proposed §3.1
+  ``ozimmu_ef``  bitmask (Alg3)    group-EF (Alg6/7)      proposed §3.2
+  ``ozimmu_h``   RN const (Alg8)   group-EF (Alg6/7)      proposed §3.3
+  ``oz2_b``      oz2 trunc (const) exponent ladder        OS-II (Uchino et al.)
+  ``oz2_h``      oz2 RN (const)    exponent ladder        OS-II fast-mode line
+  =============  ================  =====================  ====================
+
+The oz2 variants share ONE power-of-two digit grid per matrix (constant
+scaling), so all slice-pair scales collapse to a scalar exponent ladder:
+full mode evaluates every k^2 slice pair, ``:fast`` mode only the
+anti-diagonal band s + t <= k + 1, and consecutive groups fold into one
+integer word before each high-precision add
+(``accumulate.matmul_oz2``) — strictly fewer high-precision adds than the
+group-EF path at equal k.
 
 Two entry points:
 
@@ -59,8 +70,13 @@ DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
 @dataclasses.dataclass(frozen=True)
 class OzimmuConfig:
     k: int = 8                      # number of slices (fixed-k configs)
-    split: str = "rn_const"         # bitmask | rn | rn_const
-    accumulate: str = "group_ef"    # naive | group_ef
+    split: str = "rn_const"         # bitmask | rn | rn_const |
+                                    # oz2_rn | oz2_bitmask (constant grid)
+    accumulate: str = "group_ef"    # naive | group_ef | oz2 (exponent
+                                    # ladder; needs an oz2_* split)
+    fast: bool = False              # oz2 only (spec token ``:fast``):
+                                    # evaluate the s+t <= k+1 band instead
+                                    # of all k^2 slice pairs
     accum_dtype: str = "f64"        # f64 | f32 | df32
     use_pallas: Union[bool, str] = False
                                     # False: XLA everywhere.  True: group
@@ -94,31 +110,43 @@ VARIANTS = {
     "ozimmu_rn": OzimmuConfig(split="rn", accumulate="naive"),
     "ozimmu_ef": OzimmuConfig(split="bitmask", accumulate="group_ef"),
     "ozimmu_h": OzimmuConfig(split="rn_const", accumulate="group_ef"),
+    "oz2_b": OzimmuConfig(split="oz2_bitmask", accumulate="oz2"),
+    "oz2_h": OzimmuConfig(split="oz2_rn", accumulate="oz2"),
 }
 
 _SPLITTERS = {
     "bitmask": splitting.split_bitmask,
     "rn": splitting.split_rn,
     "rn_const": splitting.split_rn_const,
+    "oz2_rn": splitting.split_oz2,
+    "oz2_bitmask": splitting.split_oz2_bitmask,
 }
+
+def digit_bits(cfg: "OzimmuConfig", beta: int) -> int:
+    """Slice digit magnitude bits under ``cfg.split`` (sizes r / ladders);
+    delegates to :func:`repro.core.splitting.digit_bits`."""
+    return splitting.digit_bits(cfg.split, beta)
 
 
 _MESH_REDUCES = ("int32", "df32")
 
 
 def parse_spec(spec: str) -> OzimmuConfig:
-    """Parse ``"ozimmu_h-8"`` / ``"ozimmu_ef-10:df32"`` style strings.
+    """Parse ``"ozimmu_h-8"`` / ``"oz2_h-auto:fast"`` style strings.
 
     Full grammar (docs/engine.md):
     ``variant["-"k][":"opt]*["@"mesh_axis["/"mesh_reduce]]`` where ``k`` is
     an integer or ``auto`` (per-contraction accuracy-driven slice count,
     core/plan.py) and each ``:opt`` is an accumulator dtype
-    (``f64``/``f32``/``df32``) or ``fused`` (the one-HBM-pass Pallas
-    pipeline) — e.g. ``"ozimmu_h-auto:df32:fused@model"`` runs the fused
-    pipeline, contraction-sharded over the ``model`` mesh axis with the
-    exact int32 cross-device reduction, with auto-planned k;
-    ``"...@model/df32"`` selects the compensated partial-accumulator
-    reduction instead (see docs/distributed.md).
+    (``f64``/``f32``/``df32``), ``fused`` (the one-HBM-pass Pallas
+    pipeline), or — for the ``oz2_*`` variants only — ``fast`` (evaluate
+    the anti-diagonal band s + t <= k + 1 instead of all k^2 slice pairs).
+    E.g. ``"ozimmu_h-auto:df32:fused@model"`` runs the fused pipeline,
+    contraction-sharded over the ``model`` mesh axis with the exact int32
+    cross-device reduction, with auto-planned k; ``"oz2_h-auto:fast"``
+    runs the Ozaki-II fast mode with auto-planned k against the oz2 error
+    model; ``"...@model/df32"`` selects the compensated
+    partial-accumulator reduction instead (see docs/distributed.md).
     """
     mesh_axis, mesh_reduce = None, "int32"
     if "@" in spec:
@@ -131,7 +159,7 @@ def parse_spec(spec: str) -> OzimmuConfig:
         if mesh_reduce not in _MESH_REDUCES:
             raise ValueError(f"unknown mesh reduce {mesh_reduce!r}; "
                              f"options: {_MESH_REDUCES}")
-    accum_dtype, use_pallas = "f64", False
+    accum_dtype, use_pallas, fast = "f64", False, False
     spec, *opts = spec.split(":")
     seen_accum = False
     for opt in opts:
@@ -144,9 +172,13 @@ def parse_spec(spec: str) -> OzimmuConfig:
             if use_pallas == "fused":
                 raise ValueError("duplicate 'fused' token in engine spec")
             use_pallas = "fused"
+        elif opt == "fast":
+            if fast:
+                raise ValueError("duplicate 'fast' token in engine spec")
+            fast = True
         else:
             raise ValueError(f"unknown engine spec option {opt!r}; "
-                             f"options: f64, f32, df32, fused")
+                             f"options: f64, f32, df32, fused, fast")
     name, _, kstr = spec.partition("-")
     if name not in VARIANTS:
         raise ValueError(f"unknown ozimmu variant {name!r}; "
@@ -156,9 +188,13 @@ def parse_spec(spec: str) -> OzimmuConfig:
         raise ValueError(f"bad slice count {kstr!r} in engine spec "
                          f"(an integer >= 1, or 'auto')")
     cfg = VARIANTS[name]
+    if fast and cfg.accumulate != "oz2":
+        raise ValueError(f"the 'fast' token applies to the oz2_* variants "
+                         f"only (the ozimmu family always evaluates the "
+                         f"fast-mode band); got {name!r}")
     return cfg.with_(k=cfg.k if (auto_k or not kstr) else int(kstr),
                      auto_k=auto_k, accum_dtype=accum_dtype,
-                     use_pallas=use_pallas, mesh_axis=mesh_axis,
+                     use_pallas=use_pallas, fast=fast, mesh_axis=mesh_axis,
                      mesh_reduce=mesh_reduce)
 
 
@@ -181,7 +217,9 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     """
     n = n_total if n_total is not None else a.shape[-1]
     beta = splitting.compute_beta(n)
-    if cfg.use_pallas == "fused" and cfg.split in ("bitmask", "rn_const"):
+    if cfg.use_pallas == "fused" and cfg.split != "rn":
+        # every constant-ratio strategy fuses: per-row grids (bitmask,
+        # rn_const) and the oz2 shared constant grids alike
         from repro.kernels import ops as kops  # lazy: kernels are optional
         sa = kops.split_fused(a, cfg.k, beta, mode=cfg.split, axis=0,
                               rowmax_reduce=rowmax_reduce)
@@ -218,13 +256,21 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
         else:
             group_gemm_fn = partial_fn(kops.group_gemm, sa, sb)
         if cfg.use_pallas == "fused":
-            scale_accum_fn = kops.scale_accum_update
+            scale_accum_fn = (kops.oz2_scale_accum_update
+                              if cfg.accumulate == "oz2"
+                              else kops.scale_accum_update)
     if cfg.accumulate == "naive":
         return accumulate.matmul_naive(
             sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
             partial=partial, product_reduce=product_reduce,
             scale_accum_fn=scale_accum_fn, pair_gemm_fn=pair_gemm_fn)
     n = n_total if n_total is not None else a.shape[-1]
+    if cfg.accumulate == "oz2":
+        return accumulate.matmul_oz2(
+            sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
+            fast=cfg.fast, n_total=n, digit_bits=digit_bits(cfg, sa.beta),
+            group_gemm_fn=group_gemm_fn, partial=partial,
+            product_reduce=product_reduce, scale_accum_fn=scale_accum_fn)
     r = splitting.compute_r(n, sa.beta)
     return accumulate.matmul_group_ef(
         sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype, r=r,

@@ -48,7 +48,12 @@ sublane/lane multiple via :func:`tile`.
 The planner's cost accounting reuses the paper's own accounting:
 :func:`repro.core.accumulate.num_highprec_adds` for step (iv) and the
 fast-mode pair count ``k(k+1)/2`` for step (iii) — see
-``docs/algorithms.md#the-execution-planner-auto-k``.
+``docs/algorithms.md#the-execution-planner-auto-k``.  The oz2 variants
+get their own rows: ``k^2`` (full) / ``k(k+1)/2`` (fast) pairs, ladder-
+window adds (``accumulate.oz2_num_highprec_adds``), and an eps model in
+which the two probed operand gaps combine as ``max`` instead of sum (the
+OS-II constant-scaling analysis — each truncation term carries only its
+own operand's spread; the other operand enters via its RMS).
 """
 from __future__ import annotations
 
@@ -59,8 +64,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.accumulate import num_highprec_adds
-from repro.core.splitting import compute_beta, compute_r
+from repro.core.accumulate import (num_highprec_adds, oz2_num_highprec_adds,
+                                   oz2_num_pairs)
+from repro.core.splitting import compute_beta, compute_r, digit_bits
 
 __all__ = ["DEFAULT_TARGET_EPS", "Plan", "plan_contraction", "auto_k",
            "operand_gap_bits", "kernel_blocks", "tile", "describe_config"]
@@ -134,19 +140,34 @@ def _clamp_k(k: int) -> int:
     return max(K_MIN, min(K_MAX, k))
 
 
+_TRUNC_SPLITS = ("bitmask", "oz2_bitmask")
+_OZ2_SPLITS = ("oz2_rn", "oz2_bitmask")
+
+
 def choose_k(n: int, beta: int, target_eps: float, *, split: str,
              mantissa: int, m: int = 1, p: int = 1,
-             gap_a: Optional[int] = None, gap_b: Optional[int] = None
-             ) -> int:
+             gap_a: Optional[int] = None, gap_b: Optional[int] = None,
+             fast: bool = False) -> int:
     """Smallest k meeting ``target_eps`` under the bit model above.
 
     ``gap_a``/``gap_b`` are the probed operand exponent ranges; ``None``
     means "no concrete operands" (traced call) and selects the static
     mantissa-coverage plan.
+
+    The oz2 splits (constant scaling) follow the OS-II error analysis
+    instead: each truncation term inherits only its OWN operand's spread —
+    the other operand enters through its column/row RMS, bounded by
+    Cauchy-Schwarz — so the two probed gaps combine as ``max``, not sum
+    (docs/algorithms.md#ozaki-scheme-ii).  Fast mode charges one extra bit
+    for the dropped g > k+1 groups (they sit at the truncation level).
     """
-    guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split == "bitmask" else 0)
+    guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split in _TRUNC_SPLITS
+                           else 0)
     if gap_a is None or gap_b is None:
         needed = mantissa + _clog2(n) + guard
+    elif split in _OZ2_SPLITS:
+        needed = (_bits_of(target_eps) + max(gap_a, gap_b) + int(fast)
+                  + _clog2(m * p) + (_clog2(n) + 1) // 2 + guard)
     else:
         needed = (_bits_of(target_eps) + gap_a + gap_b
                   + _clog2(m * p) + (_clog2(n) + 1) // 2 + guard)
@@ -162,8 +183,11 @@ class Plan:
     r: int
     bits_needed: int           # needed bits the chosen k covers (k * beta)
     probed: bool               # True: concrete-operand probe; False: static
-    int8_gemms: int            # fast-mode slice pairs, k(k+1)/2 (step iii)
-    highprec_adds: int         # paper accounting for step (iv)
+    int8_gemms: int            # slice pairs (step iii): k(k+1)/2 for the
+                               # ozimmu family and oz2 fast mode, k^2 for
+                               # oz2 full mode
+    highprec_adds: int         # step (iv): paper accounting for the ozimmu
+                               # family; exponent-ladder windows for oz2
     blocks: Tuple[int, int, int]   # preferred (bm, bn, bp) kernel tiles
 
     def describe(self) -> str:
@@ -176,13 +200,38 @@ class Plan:
 
 
 @functools.lru_cache(maxsize=1024)
-def _plan_static(n: int, m: int, p: int, k: int, group_ef: bool) -> Plan:
+def _plan_static(n: int, m: int, p: int, k: int, accumulate: str,
+                 fast: bool, dbits: int, word_bits: int) -> Plan:
     beta = compute_beta(n)
-    r = compute_r(n, beta)
+    if accumulate == "oz2":
+        r = compute_r(n, beta, dbits)
+        gemms = oz2_num_pairs(k, fast)
+        adds = oz2_num_highprec_adds(k, r, beta, n, fast, dbits, word_bits)
+    else:
+        r = compute_r(n, beta)
+        gemms = k * (k + 1) // 2
+        adds = num_highprec_adds(k, r, accumulate == "group_ef")
     return Plan(k=k, beta=beta, r=r, bits_needed=k * beta, probed=False,
-                int8_gemms=k * (k + 1) // 2,
-                highprec_adds=num_highprec_adds(k, r, group_ef),
+                int8_gemms=gemms, highprec_adds=adds,
                 blocks=kernel_blocks(m, n, p))
+
+
+def _word_bits(cfg) -> int:
+    """Integer word budget of the oz2 exponent ladder under ``cfg``:
+    52 bits (int64 word, exact f64 convert) for the f64 accumulator in x64
+    mode, 31 (int32 word) otherwise — mirrors ``accumulate.matmul_oz2``."""
+    if cfg.accum_dtype != "f64":
+        return 31
+    try:
+        import jax
+        return 52 if jax.config.jax_enable_x64 else 31
+    except ImportError:
+        return 52
+
+
+def _cfg_cost_key(cfg, beta: int) -> Tuple[str, bool, int, int]:
+    return (cfg.accumulate, bool(getattr(cfg, "fast", False)),
+            digit_bits(cfg.split, beta), _word_bits(cfg))
 
 
 def plan_contraction(cfg, m: int, n: int, p: int, *,
@@ -193,12 +242,13 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
     With concrete operands ``a``/``b`` and ``cfg.auto_k``, the accuracy
     probe picks k; traced or absent operands fall back to the static
     mantissa-coverage plan.  Fixed-k configs just get the cost accounting
-    and kernel blocks.
+    and kernel blocks.  The oz2 variants are planned against the OS-II
+    error model (max-of-gaps, see :func:`choose_k`) and costed with their
+    own pair/ladder accounting.
     """
     beta = compute_beta(n)
-    group_ef = cfg.accumulate == "group_ef"
     if not getattr(cfg, "auto_k", False):
-        return _plan_static(n, m, p, cfg.k, group_ef)
+        return _plan_static(n, m, p, cfg.k, *_cfg_cost_key(cfg, beta))
     eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
     mantissa = 53 if _bits_of(eps) > 22 else 24
     if a is not None and hasattr(a, "dtype") \
@@ -212,8 +262,9 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
         gap_b = operand_gap_bits(b, axis=1)
         probed = True
     k = choose_k(n, beta, eps, split=cfg.split, mantissa=mantissa,
-                 m=m, p=p, gap_a=gap_a, gap_b=gap_b)
-    base = _plan_static(n, m, p, k, group_ef)
+                 m=m, p=p, gap_a=gap_a, gap_b=gap_b,
+                 fast=bool(getattr(cfg, "fast", False)))
+    base = _plan_static(n, m, p, k, *_cfg_cost_key(cfg, beta))
     return dataclasses.replace(base, probed=probed)
 
 
@@ -283,6 +334,7 @@ def describe_config(cfg, m: int = 4096, n: int = 4096, p: int = 4096) -> str:
     kpart = (f"k=auto(target_eps={eps:.1e}, static {pl.k} @ n={n})"
              if getattr(cfg, "auto_k", False) else f"k={cfg.k}")
     fused = cfg.use_pallas == "fused"
-    return (f"{cfg.split}/{cfg.accumulate}:{cfg.accum_dtype} {kpart}, "
+    mode = "/fast" if getattr(cfg, "fast", False) else ""
+    return (f"{cfg.split}/{cfg.accumulate}{mode}:{cfg.accum_dtype} {kpart}, "
             f"{'fused split+epilogue Pallas pipeline' if fused else 'pallas group-GEMM' if cfg.use_pallas else 'XLA path'}, "
             f"{pl.int8_gemms} int8 GEMMs / {pl.highprec_adds} hp adds")

@@ -12,6 +12,25 @@ Implements the three splitting strategies from the paper:
     scales stay a geometric sequence and group-wise error-free accumulation
     (Alg. 6/7) applies.
 
+plus the two *constant-scaling* strategies of the Ozaki-II line ("Error
+Analysis of Matrix Multiplication Emulation Using Ozaki-II Scheme", Uchino
+et al.; "Improved Scaling for Fast Mode of Ozaki Scheme II", Kawakami &
+Takahashi):
+
+  * ``split_oz2``       — round-to-nearest extraction on ONE power-of-two
+    digit grid shared by the whole matrix (per batch element), derived from
+    the global |a| maximum instead of per-row maxima.
+  * ``split_oz2_bitmask`` — the truncation analogue (Alg. 3 digits on the
+    shared grid).
+
+The shared grid is what makes the oz2 accumulation path
+(``repro.core.accumulate.matmul_oz2``) able to fold every slice-pair scale
+into a single scalar exponent ladder; the price is that the truncation
+error is anchored at the *global* magnitude, not each row's own (see
+docs/algorithms.md#ozaki-scheme-ii).  Constant-scaling splits carry the
+scalar base in ``Split.gbase``; their ``scale``/``base`` fields broadcast
+it so every per-row consumer keeps working unchanged.
+
 All three return a :class:`Split` with the unified convention
 
     A  ≈  sum_s  diag(scale[s]) @ digits[s]          (axis=0, row scales)
@@ -55,6 +74,8 @@ __all__ = [
     "split_bitmask",
     "split_rn",
     "split_rn_const",
+    "split_oz2",
+    "split_oz2_bitmask",
     "reconstruct",
 ]
 
@@ -73,6 +94,10 @@ class Split(NamedTuple):
               for the adaptive RN strategy.
       beta:   bits per slice.
       axis:   0 if ``scale`` indexes rows of the matrix, 1 for columns.
+      gbase:  ``(*batch,)`` scalar geometric base for the constant-scaling
+              (oz2) strategies — every entry of ``base`` equals it, so the
+              slice-pair scales collapse to one exponent ladder per batch
+              element.  ``None`` for the per-row/col strategies.
     """
 
     digits: jax.Array
@@ -80,6 +105,7 @@ class Split(NamedTuple):
     base: Optional[jax.Array]
     beta: int
     axis: int
+    gbase: Optional[jax.Array] = None
 
 
 def compute_beta(n: int) -> int:
@@ -97,14 +123,39 @@ def compute_beta(n: int) -> int:
     return beta
 
 
-def compute_r(n: int, beta: int) -> int:
-    """r = max(1, 2^(31 - 2*beta - ceil(log2 n))) — eq. (12).
+def compute_r(n: int, beta: int, digit_bits: Optional[int] = None) -> int:
+    """Slice-pair products summable in INT32 without overflow — eq. (12).
 
-    The number of slice-pair products that can be summed in an INT32
-    accumulator without overflow (proof: paper §5.2).
+    Default (``digit_bits=None``): the paper's
+    ``r = max(1, 2^(31 - 2*beta - ceil(log2 n)))`` for bitmask digits,
+    whose magnitude is STRICTLY below 2^beta (``<= 2^beta - 1``), so
+    ``r * n * (2^beta - 1)^2 < 2^31`` holds with the power-of-two r.
+
+    With an explicit ``digit_bits`` the digits are taken to ATTAIN the
+    closed endpoint ±2^digit_bits (round-to-nearest digits do: an exact
+    half-grid residual rounds to ±2^(beta-1)).  Then the power-of-two r
+    would allow a chunk sum of exactly +2^31 — one past INT32_MAX — on
+    adversarial constant-sign operands, so one pair is shaved off:
+    ``r = 2^(31 - 2*digit_bits - ceil(log2 n)) - 1`` (floored at 1; a
+    single pair is always safe because eq. (4) keeps
+    ``n * 2^(2*digit_bits) <= 2^30``).  Net: RN callers passing
+    ``beta - 1`` still get ~4x the bitmask group size.
     """
     clog2 = max(1, (n - 1).bit_length())
-    return max(1, 2 ** max(0, 31 - 2 * beta - clog2))
+    if digit_bits is None:
+        return max(1, 2 ** max(0, 31 - 2 * beta - clog2))
+    return max(1, 2 ** max(0, 31 - 2 * digit_bits - clog2) - 1)
+
+
+# splits whose digits lie in [-2^(beta-1), 2^(beta-1)] (round-to-nearest);
+# the rest span the full +-(2^beta - 1) truncation range
+RN_SPLITS = ("rn", "rn_const", "oz2_rn")
+
+
+def digit_bits(split: str, beta: int) -> int:
+    """Digit magnitude bits of a splitting strategy (the single source of
+    truth for the r / ladder-word accounting)."""
+    return beta - 1 if split in RN_SPLITS else beta
 
 
 def _mantissa_bits(dtype) -> int:
@@ -173,13 +224,19 @@ def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
-    dt = a.dtype
-    two_beta = jnp.asarray(2.0 ** beta, dt)
-
     rowmax = _rowmax(a, axis)
     if rowmax_reduce is not None:
         rowmax = rowmax_reduce(rowmax)
     base = 2.0 * _pow2_floor(rowmax)                    # scale[s] = base * 2^(-beta*s)
+    digits = _bitmask_extract(a, base, beta, k, axis)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
+
+
+def _bitmask_extract(a: jax.Array, base: jax.Array, beta: int, k: int,
+                     axis: int) -> jax.Array:
+    """The Alg. 3 truncation loop against a given (per-row or broadcast
+    constant) power-of-two ``base``; returns ``(k, *batch, m, n)`` int8."""
+    two_beta = jnp.asarray(2.0 ** beta, a.dtype)
     r = a * _bcast(1.0 / base, axis)                    # exact: base is a power of two
     digits = []
     for _ in range(k):
@@ -187,8 +244,7 @@ def split_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
         d = jnp.trunc(r)
         r = r - d                                       # exact
         digits.append(d.astype(jnp.int8))               # |d| <= 2^beta - 1 <= 127
-    digits = jnp.stack(digits)
-    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
+    return jnp.stack(digits)
 
 
 def _rn_extract(r: jax.Array, grid: jax.Array, axis: int):
@@ -260,13 +316,21 @@ def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
     """
     if beta is None:
         beta = compute_beta(_contract_len(a, axis))
-    dt = a.dtype
-    two_beta = jnp.asarray(2.0 ** beta, dt)
-
     rowmax = _rowmax(a, axis)
     if rowmax_reduce is not None:
         rowmax = rowmax_reduce(rowmax)
     mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
+    digits = _rn_const_extract(a, mu, beta, k, axis)
+    # scale[s] = mu * 2^(-beta*(s-1)) = (mu * 2^beta) * 2^(-beta*s)
+    base = mu * (2.0 ** beta)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
+
+
+def _rn_const_extract(a: jax.Array, mu: jax.Array, beta: int, k: int,
+                      axis: int) -> jax.Array:
+    """The Alg. 8 RN loop against a given (per-row or broadcast constant)
+    power-of-two first grid ``mu``; returns ``(k, *batch, m, n)`` int8."""
+    two_beta = jnp.asarray(2.0 ** beta, a.dtype)
     r = a
     grid = mu
     digits = []
@@ -275,10 +339,66 @@ def split_rn_const(a: jax.Array, k: int, *, beta: Optional[int] = None,
         d = s * _bcast(1.0 / grid, axis)
         digits.append(d.astype(jnp.int8))
         grid = grid * (1.0 / two_beta)
-    digits = jnp.stack(digits)
-    # scale[s] = mu * 2^(-beta*(s-1)) = (mu * 2^beta) * 2^(-beta*s)
+    return jnp.stack(digits)
+
+
+def _global_base(a: jax.Array, axis: int,
+                 rowmax_reduce: Optional[Callable]) -> jax.Array:
+    """Per-batch-element global |a| maximum, broadcast back to the per-row
+    (``axis=0``) / per-column (``axis=1``) vector shape ``(*batch, r)``.
+
+    Reduced via the per-row maxima so the ``rowmax_reduce`` hook (a mesh
+    ``pmax`` over contraction shards) composes exactly as in the per-row
+    splitters: every shard sees the same global maximum, hence the same
+    shared digit grid.
+    """
+    rowmax = _rowmax(a, axis)
+    if rowmax_reduce is not None:
+        rowmax = rowmax_reduce(rowmax)
+    return jnp.broadcast_to(jnp.max(rowmax, axis=-1, keepdims=True),
+                            rowmax.shape)
+
+
+def split_oz2(a: jax.Array, k: int, *, beta: Optional[int] = None,
+              axis: int = 0,
+              rowmax_reduce: Optional[Callable] = None) -> Split:
+    """Ozaki-II constant scaling, round-to-nearest digits (``oz2_h``).
+
+    One power-of-two grid ``mu = 2^ceil(log2 max|a|) * 2^(1-beta)`` for the
+    WHOLE matrix (per batch element): the RN extraction of Alg. 8 runs
+    against it, so every row's slices live on a single shared exponent
+    ladder and a slice-pair product's scale is the *scalar*
+    ``gbaseA * gbaseB * 2^(-beta*(s+t))`` — the precondition for the oz2
+    exponent-ladder accumulation (``accumulate.matmul_oz2``).  Digits in
+    [-2^(beta-1), 2^(beta-1)].  Batched like :func:`split_bitmask`;
+    ``rowmax_reduce`` as there (one reduction, then a local max over rows).
+    """
+    if beta is None:
+        beta = compute_beta(_contract_len(a, axis))
+    gmax = _global_base(a, axis, rowmax_reduce)
+    mu = _pow2_ceil(gmax) * (2.0 ** (1 - beta))
+    digits = _rn_const_extract(a, mu, beta, k, axis)
     base = mu * (2.0 ** beta)
-    return Split(digits, _geo_scales(base, beta, k), base, beta, axis)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis,
+                 gbase=base[..., 0])
+
+
+def split_oz2_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
+                      axis: int = 0,
+                      rowmax_reduce: Optional[Callable] = None) -> Split:
+    """Ozaki-II constant scaling, truncation digits (``oz2_b``).
+
+    Alg. 3's bit-mask extraction against the shared global grid
+    ``base = 2 * 2^floor(log2 max|a|)``.  Digits in [-(2^beta-1), 2^beta-1];
+    same ladder structure as :func:`split_oz2`.
+    """
+    if beta is None:
+        beta = compute_beta(_contract_len(a, axis))
+    gmax = _global_base(a, axis, rowmax_reduce)
+    base = 2.0 * _pow2_floor(gmax)
+    digits = _bitmask_extract(a, base, beta, k, axis)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis,
+                 gbase=base[..., 0])
 
 
 def reconstruct(split: Split, dtype=None) -> jax.Array:

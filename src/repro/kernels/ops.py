@@ -53,7 +53,8 @@ def _pad_to(x: jax.Array, mults: Sequence[int]) -> jax.Array:
 def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
                 axis: int = 0,
                 rowmax_reduce: Optional[Callable] = None) -> Split:
-    """Pallas-accelerated splitting (Alg. 3 'bitmask' / Alg. 8 'rn_const').
+    """Pallas-accelerated splitting (Alg. 3 'bitmask' / Alg. 8 'rn_const' /
+    the oz2 constant-grid modes 'oz2_bitmask' / 'oz2_rn').
 
     Returns the same :class:`Split` contract as the pure-jnp splitters —
     bit-identical digits and scales, in ``a``'s own dtype (f64 inputs stay
@@ -63,39 +64,57 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
     for B) transposes the trailing two axes in and out of the row kernel.
     ``rowmax_reduce`` widens the row maxima before grids are derived
     (the mesh-axis pmax hook) exactly as in the library splitters.
+
+    The oz2 modes derive ONE grid per batch element from the global |a|
+    maximum; without batch dims the kernel runs in its const-grid mode
+    (a (1, 1) scalar operand instead of an (m, 1) streamed vector), with
+    batch dims the scalar broadcasts onto the flattened row grid —
+    bit-identical either way.
     """
     if axis == 1:
         sp = split_fused(jnp.swapaxes(a, -1, -2), k, beta, mode=mode,
                          axis=0, rowmax_reduce=rowmax_reduce)
         return Split(jnp.swapaxes(sp.digits, -1, -2), sp.scale, sp.base,
-                     beta, 1)
+                     beta, 1, gbase=sp.gbase)
     rowmax = _rowmax(a, 0)                              # (*batch, m)
     if rowmax_reduce is not None:
         rowmax = rowmax_reduce(rowmax)
-    if mode == "bitmask":
+    gbase = None
+    if mode in ("oz2_rn", "oz2_bitmask"):
+        rowmax = jnp.broadcast_to(
+            jnp.max(rowmax, axis=-1, keepdims=True), rowmax.shape)
+    if mode in ("bitmask", "oz2_bitmask"):
         base = 2.0 * _pow2_floor(rowmax)
         invgrid = (2.0 ** beta) / base  # 1/grid_1, grid_1 = base*2^-beta
-    elif mode == "rn_const":
+        kmode = "bitmask"
+    elif mode in ("rn_const", "oz2_rn"):
         mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
         base = mu * (2.0 ** beta)
         invgrid = 1.0 / mu
+        kmode = "rn_const"
     else:
-        raise ValueError(f"fused splitting supports bitmask/rn_const, "
-                         f"got {mode!r}")
+        raise ValueError(f"fused splitting supports bitmask/rn_const/"
+                         f"oz2_bitmask/oz2_rn, got {mode!r}")
+    if mode in ("oz2_rn", "oz2_bitmask"):
+        gbase = base[..., 0]
     batch = a.shape[:-2]
     m, n = a.shape[-2:]
     rows = math.prod(batch, start=m)
     a2 = a.reshape((rows, n))
-    inv2 = invgrid.reshape((rows, 1))
+    const_grid = gbase is not None and not batch
+    inv2 = (invgrid[:1, None] if const_grid
+            else invgrid.reshape((rows, 1)))
     bm_pref, bn_pref, _ = plan.kernel_blocks(rows, n)
     bm = plan.tile(rows, bm_pref, 8)
     bn = plan.tile(n, bn_pref, 128)
     a_p = _pad_to(a2, (bm, bn))
-    inv_p = _pad_to(inv2, (bm, 1))
-    digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=mode, bm=bm,
-                             bn=bn, interpret=INTERPRET)[:, :rows, :n]
+    inv_p = inv2 if const_grid else _pad_to(inv2, (bm, 1))
+    digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=kmode, bm=bm,
+                             bn=bn, const_grid=const_grid,
+                             interpret=INTERPRET)[:, :rows, :n]
     digits = digits.reshape((k,) + batch + (m, n))
-    return Split(digits, _geo_scales(base, beta, k), base, beta, 0)
+    return Split(digits, _geo_scales(base, beta, k), base, beta, 0,
+                 gbase=gbase)
 
 
 def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
@@ -183,6 +202,56 @@ def scale_accum_update(prod: jax.Array, srow: jax.Array, scol: jax.Array,
         hi, lo = scale_accum(prod, srow, scol, acc.hi, acc.lo)
         return DF32(hi, lo)
     return scale_accum_plain(prod, srow, scol, acc)
+
+
+def _oz2_epilogue_operands(word: jax.Array, s: jax.Array, *accs: jax.Array):
+    """Const-scale analogue of :func:`_epilogue_operands`: flatten batch,
+    pad to tiles, reshape the per-batch scalar to (B, 1, 1)."""
+    batch = word.shape[:-2]
+    m, p = word.shape[-2:]
+    B = math.prod(batch, start=1)
+    bm_pref, bp_pref, _ = plan.kernel_blocks(m, p)
+    bm = plan.tile(m, bm_pref, 8)
+    bp = plan.tile(p, bp_pref, 128)
+    word_p = _pad_to(word.reshape((B, m, p)), (1, bm, bp))
+    s_p = s.reshape((B, 1, 1))
+    accs_p = [_pad_to(c.reshape((B, m, p)), (1, bm, bp)) for c in accs]
+
+    def unpad(x):
+        return x[:, :m, :p].reshape(batch + (m, p))
+
+    return word_p, s_p, accs_p, bm, bp, unpad
+
+
+def oz2_scale_accum(word: jax.Array, s: jax.Array, c_hi: jax.Array,
+                    c_lo: jax.Array):
+    """Fused oz2 df32 epilogue: ``(c_hi, c_lo) += s * float(word)``,
+    compensated; word ``(*batch, m, p)`` int32, s ``(*batch,)`` f32."""
+    word_p, s_p, (hi_p, lo_p), bm, bp, unpad = \
+        _oz2_epilogue_operands(word, s, c_hi, c_lo)
+    hi, lo = _sa.scale_accum_const(word_p, s_p, hi_p, lo_p, bm=bm, bp=bp,
+                                   interpret=INTERPRET)
+    return unpad(hi), unpad(lo)
+
+
+def oz2_scale_accum_plain(word: jax.Array, s: jax.Array, c: jax.Array):
+    """Fused oz2 plain epilogue (f64/f32 accumulator; word may be the
+    int64 ladder word in f64/x64 mode)."""
+    word_p, s_p, (c_p,), bm, bp, unpad = _oz2_epilogue_operands(word, s, c)
+    out = _sa.scale_accum_const_plain(word_p, s_p, c_p, bm=bm, bp=bp,
+                                      interpret=INTERPRET)
+    return unpad(out)
+
+
+def oz2_scale_accum_update(word: jax.Array, s: jax.Array, acc):
+    """``scale_accum_fn`` hook for ``accumulate.matmul_oz2``: one fused
+    ladder-window convert+scale+add through the const-grid Pallas kernels
+    (bit-identical to the inline jnp epilogue)."""
+    from repro.core.accumulate import DF32  # local: avoid import cycle
+    if isinstance(acc, DF32):
+        hi, lo = oz2_scale_accum(word, s, acc.hi, acc.lo)
+        return DF32(hi, lo)
+    return oz2_scale_accum_plain(word, s, acc)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -21,7 +21,18 @@ Two accumulator modes, selected by which entry point is called:
   * :func:`scale_accum_plain` — plain f32/f64 accumulator (f64 interprets
     on CPU; on TPU use df32), matching ``accumulate._scale_accum_plain``.
 
-Both are batched: a leading grid axis maps batch elements, with per-batch
+plus their constant-grid (Ozaki-II) twins :func:`scale_accum_const` /
+:func:`scale_accum_const_plain`: the oz2 exponent ladder collapses the
+per-row/col scale vectors to ONE scalar per batch element, so the const
+kernels take a (B, 1, 1) scale (every tile pinned to the same element by
+its BlockSpec — nothing streamed) and perform one multiply where the
+per-row kernels perform two.  ``scale_accum_const_plain`` also accepts an
+int64 product word (the f64/x64 ladder), which the f64 accumulator
+converts exactly by the ladder's 52-bit word budget.  The operation
+sequences mirror ``accumulate._oz2_accum_df32`` / ``_oz2_accum_plain``
+bit for bit.
+
+All are batched: a leading grid axis maps batch elements, with per-batch
 scale vectors — the same layout convention as ``kernels.group_gemm``.
 """
 from __future__ import annotations
@@ -71,11 +82,42 @@ def _scale_accum_plain_kernel(p32_ref, srow_ref, scol_ref, c_in_ref, c_ref):
     c_ref[...] = c + p.astype(c.dtype) * srow_ref[...] * scol_ref[...]
 
 
+def _scale_accum_const_kernel(p_ref, s_ref, hi_in_ref, lo_in_ref,
+                              hi_ref, lo_ref):
+    """(1, bm, bp) tile: df32 accumulate the int32 ladder word scaled by
+    ONE scalar (same sequence as ``accumulate._oz2_accum_df32``)."""
+    p = p_ref[...]
+    p_hi = (p >> 8) << 8
+    p_lo = p - p_hi
+    s = s_ref[...]  # (1, 1, 1) power-of-two scalar
+    x_hi = p_hi.astype(jnp.float32) * s
+    x_lo = p_lo.astype(jnp.float32) * s
+    hi, err = _two_sum(hi_in_ref[...], x_hi)
+    lo = lo_in_ref[...] + err + x_lo
+    hi2, lo2 = _two_sum(hi, lo)
+    hi_ref[...] = hi2
+    lo_ref[...] = lo2
+
+
+def _scale_accum_const_plain_kernel(p_ref, s_ref, c_in_ref, c_ref):
+    """(1, bm, bp) tile: plain accumulate of an int32/int64 ladder word
+    scaled by one scalar (``accumulate._oz2_accum_plain``)."""
+    c = c_in_ref[...]
+    c_ref[...] = c + p_ref[...].astype(c.dtype) * s_ref[...]
+
+
 def _block_specs(bm: int, bp: int):
     return [
         pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j)),
         pl.BlockSpec((1, bm, 1), lambda b, i, j: (b, i, 0)),
         pl.BlockSpec((1, 1, bp), lambda b, i, j: (b, 0, j)),
+    ]
+
+
+def _block_specs_const(bm: int, bp: int):
+    return [
+        pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j)),
+        pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, 0, 0)),
     ]
 
 
@@ -135,3 +177,49 @@ def scale_accum_plain(p32: jax.Array, srow: jax.Array, scol: jax.Array,
         input_output_aliases={3: 0},
         interpret=interpret,
     )(p32, srow, scol, c)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
+def scale_accum_const(p32: jax.Array, s: jax.Array, c_hi: jax.Array,
+                      c_lo: jax.Array, *, bm: int = DEFAULT_BM,
+                      bp: int = DEFAULT_BP, interpret: bool = False):
+    """(c_hi, c_lo) += s * float(p32), compensated, with ONE scalar scale
+    per batch element (the oz2 ladder window).  p32 (B, m, p) int32;
+    s (B, 1, 1) f32 power of two; aliasing as :func:`scale_accum`."""
+    B, m, p = p32.shape
+    assert m % bm == 0 and p % bp == 0, (p32.shape, bm, bp)
+    assert s.shape == (B, 1, 1), s.shape
+    grid = (B, m // bm, p // bp)
+    out_spec = pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j))
+    return pl.pallas_call(
+        _scale_accum_const_kernel,
+        grid=grid,
+        in_specs=_block_specs_const(bm, bp) + [out_spec, out_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, m, p), jnp.float32),
+                   jax.ShapeDtypeStruct((B, m, p), jnp.float32)],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(p32, s, c_hi, c_lo)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
+def scale_accum_const_plain(p: jax.Array, s: jax.Array, c: jax.Array, *,
+                            bm: int = DEFAULT_BM, bp: int = DEFAULT_BP,
+                            interpret: bool = False):
+    """c += s * float(p) in ``c.dtype`` with one scalar scale per batch
+    element; ``p`` may be int32 or int64 (the f64/x64 ladder word)."""
+    B, m, pp = p.shape
+    assert m % bm == 0 and pp % bp == 0, (p.shape, bm, bp)
+    assert s.shape == (B, 1, 1), s.shape
+    grid = (B, m // bm, pp // bp)
+    out_spec = pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j))
+    return pl.pallas_call(
+        _scale_accum_const_plain_kernel,
+        grid=grid,
+        in_specs=_block_specs_const(bm, bp) + [out_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, pp), c.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(p, s, c)

@@ -12,6 +12,13 @@ to the extraction); the kernel consumes the per-row *reciprocal grid* and
 performs either truncation (bitmask, Alg. 3) or round-to-nearest-even with
 constant ratio (Alg. 8) extraction, entirely in the VPU.
 
+Constant-grid mode (``const_grid=True``, the Ozaki-II shared-grid splits):
+the reciprocal grid is ONE scalar for the whole matrix — a (1, 1) operand
+whose BlockSpec pins every tile to the same element, so the per-row scale
+vector is never materialized or streamed.  The extraction body is
+unchanged (the scalar broadcasts), hence bit-identical to the per-row
+kernel fed a constant vector.
+
 Layout: grid over (m/bm, n/bn) tiles; input tile (bm, bn) f32 in VMEM;
 output (k, bm, bn) int8 in VMEM.  bn is a multiple of 128 (lane width),
 bm a multiple of 8 (f32 sublanes).
@@ -34,7 +41,8 @@ def _split_kernel(a_ref, invgrid_ref, out_ref, *, k: int, beta: int,
 
     a_ref:       (bm, bn) float — input tile (f32 on TPU; the interpret
                  path also runs f64 for the paper-faithful DGEMM emulation)
-    invgrid_ref: (bm, 1)  float — 1 / grid_1 per row (power of two)
+    invgrid_ref: (bm, 1)  float — 1 / grid_1 per row (power of two), or
+                 (1, 1) in const-grid (oz2) mode — either broadcasts
     out_ref:     (k, bm, bn) int8 — slice digits
     """
     a = a_ref[...]
@@ -60,19 +68,27 @@ def _split_kernel(a_ref, invgrid_ref, out_ref, *, k: int, beta: int,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "beta", "mode", "bm", "bn",
-                                             "interpret"))
+                                             "const_grid", "interpret"))
 def split_fused(a: jax.Array, invgrid: jax.Array, *, k: int, beta: int,
                 mode: str = "rn_const", bm: int = DEFAULT_BM,
-                bn: int = DEFAULT_BN, interpret: bool = False) -> jax.Array:
+                bn: int = DEFAULT_BN, const_grid: bool = False,
+                interpret: bool = False) -> jax.Array:
     """All-k-slice extraction of ``a`` (m, n) f32 with per-row 1/grid.
 
     Returns (k, m, n) int8.  ``invgrid`` must be ``1 / grid`` where
     ``grid = base * 2^-beta`` (bitmask) or ``mu`` (rn_const) — see ops.py,
-    which also handles padding to tile multiples.
+    which also handles padding to tile multiples.  With
+    ``const_grid=True``, ``invgrid`` is a (1, 1) scalar shared by every
+    row (the oz2 constant-scaling mode).
     """
     m, n = a.shape
     assert m % bm == 0 and n % bn == 0, (a.shape, bm, bn)
-    assert invgrid.shape == (m, 1)
+    if const_grid:
+        assert invgrid.shape == (1, 1), invgrid.shape
+        inv_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    else:
+        assert invgrid.shape == (m, 1)
+        inv_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
     grid = (m // bm, n // bn)
     kernel = functools.partial(_split_kernel, k=k, beta=beta, mode=mode)
     return pl.pallas_call(
@@ -80,7 +96,7 @@ def split_fused(a: jax.Array, invgrid: jax.Array, *, k: int, beta: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            inv_spec,
         ],
         out_specs=pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((k, m, n), jnp.int8),

@@ -433,6 +433,46 @@ def test_ozimmu_sharded_fused_pipeline_bitwise():
     """)
 
 
+def test_oz2_sharded_bitwise_both_modes():
+    """Ozaki-II (constant scaling + exponent ladder): under the exact-int32
+    reduction the sharded emulation — plain and fused — is bit-identical
+    to the single-device path for both oz2 variants, full and fast modes
+    (the global digit grid is agreed via one pmax; the int32 chunk
+    products are psum'd BEFORE the ladder fold)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(5)
+        def phi_mat(m, n, phi=1.0):
+            u = rng.uniform(0, 1, (m, n)); z = rng.standard_normal((m, n))
+            return (u - 0.5) * np.exp(phi * z)
+
+        a = jnp.asarray(phi_mat(48, 256), jnp.float32)
+        b = jnp.asarray(phi_mat(256, 64), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        for name in ("oz2_b", "oz2_h"):
+            for fast in (False, True):
+                for pallas in (False, "fused"):
+                    cfg = ozimmu.VARIANTS[name].with_(
+                        k=6, accum_dtype="df32", fast=fast,
+                        use_pallas=pallas)
+                    ref = ozimmu.ozimmu_dot_general(a, b, dn,
+                                                    cfg.with_(use_pallas=False))
+                    local = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+                    assert bool(jnp.all(ref == local)), (name, fast, pallas)
+                    with set_mesh(mesh):
+                        got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                            a, b, dn, cfg.with_(mesh_axis="model")))(a, b)
+                    assert bool(jnp.all(ref == got)), (name, fast, pallas)
+                print(name, "fast" if fast else "full", "sharded bitwise OK")
+        print("OK")
+    """)
+
+
 def test_psum_df32_error_free_vs_plain_f32():
     """The compensated DF32 reduction keeps what a plain f32 psum rounds
     away: partials engineered so small terms vanish under f32 summation."""

@@ -20,16 +20,19 @@ DOC_FILES = ["README.md"] + sorted(
     if f.endswith(".md"))
 
 # module/function names and grammar templates that legitimately start with
-# "ozimmu" but are not engine specs
+# "ozimmu"/"oz2" but are not engine specs
 IGNORE = {
     "ozimmu_matmul", "ozimmu_dot_general", "ozimmu_config", "ozimmu.py",
     "ozimmu_roofline", "ozimmu_h_k8",
+    "oz2_num_pairs", "oz2_num_highprec_adds", "oz2_num_chunks",
+    "matmul_oz2", "split_oz2", "split_oz2_bitmask", "oz2_rn", "oz2_bitmask",
+    "oz2_scale_accum_update",
 }
 # a candidate spec: spec charset only, no brackets/dots/parens (those mark
 # grammar templates like `ozimmu[-k]` or code references).  k is digits or
-# `auto`; `:opt` repeats (accumulator dtype and/or `fused`).
-CANDIDATE = re.compile(r"^ozimmu[a-z0-9_]*(-([0-9]+|auto))?(:[a-z0-9_]+)*"
-                       r"(@[a-z0-9_]+(/[a-z0-9_]+)?)?$")
+# `auto`; `:opt` repeats (accumulator dtype, `fused`, and/or `fast`).
+CANDIDATE = re.compile(r"^(ozimmu|oz2)[a-z0-9_]*(-([0-9]+|auto))?"
+                       r"(:[a-z0-9_]+)*(@[a-z0-9_]+(/[a-z0-9_]+)?)?$")
 BACKTICKED = re.compile(r"`([^`\n]+)`")
 
 
@@ -60,8 +63,9 @@ def test_docs_quote_enough_specs():
     silent regex/doc-layout change gutting this check)."""
     specs = {s for _, s in SPECS}
     assert {"ozimmu_h-8", "ozimmu_h-8:df32@model",
-            "ozimmu_h-auto:df32:fused"} <= specs, specs
-    assert len(specs) >= 6, specs
+            "ozimmu_h-auto:df32:fused", "oz2_h-auto:fast",
+            "oz2_b-8:df32@model"} <= specs, specs
+    assert len(specs) >= 8, specs
 
 
 @pytest.mark.parametrize("rel,spec", SPECS,

@@ -176,6 +176,64 @@ def test_scale_accum_plain_matches_ref(rng, dtype, m, p):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("batch", [(), (3,)])
+def test_scale_accum_const_matches_jnp_epilogue(rng, batch):
+    """The constant-grid (oz2 ladder) df32 kernel is bit-identical to the
+    inline `accumulate._oz2_accum_df32` epilogue, rank-2 and batched."""
+    from repro.core.accumulate import DF32, _oz2_accum_df32
+    m, p = 24, 140
+    word = jnp.asarray(rng.integers(-2**30, 2**30, batch + (m, p)), jnp.int32)
+    s = jnp.asarray(2.0 ** rng.integers(-10, 10, batch), jnp.float32)
+    c_hi = jnp.asarray(rng.standard_normal(batch + (m, p)), jnp.float32)
+    c_lo = jnp.asarray(rng.standard_normal(batch + (m, p)) * 1e-7, jnp.float32)
+    hi, lo = ops.oz2_scale_accum(word, s, c_hi, c_lo)
+    want = _oz2_accum_df32(word, s, DF32(c_hi, c_lo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(want.hi))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(want.lo))
+
+
+@pytest.mark.parametrize("word_dtype", [jnp.int32, jnp.int64])
+@pytest.mark.parametrize("acc_dtype", [jnp.float32, jnp.float64])
+def test_scale_accum_const_plain_matches_jnp(rng, word_dtype, acc_dtype):
+    """The plain const kernel accepts int32 AND int64 ladder words (the
+    f64/x64 exponent ladder) and equals the inline epilogue bitwise."""
+    from repro.core.accumulate import _oz2_accum_plain
+    m, p = 16, 130
+    word = jnp.asarray(rng.integers(-2**50, 2**50, (m, p)), word_dtype)
+    s = jnp.asarray(2.0 ** rng.integers(-10, 10, ()), acc_dtype)
+    c = jnp.asarray(rng.standard_normal((m, p)), acc_dtype)
+    got = ops.oz2_scale_accum_plain(word, s, c)
+    want = _oz2_accum_plain(word, s, c)
+    assert got.dtype == acc_dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_split_fused_const_grid_matches_library(rng):
+    """The const-grid kernel mode (one (1,1) scalar operand) produces the
+    same digits/scales as the library oz2 splitters, both axes, f32/f64,
+    batched (where the scalar broadcasts onto the row grid)."""
+    from repro.core.splitting import split_oz2, split_oz2_bitmask
+    k, n = 4, 160
+    beta = compute_beta(n)
+    for lib, mode in ((split_oz2, "oz2_rn"),
+                      (split_oz2_bitmask, "oz2_bitmask")):
+        for shape, dtype in (((48, n), np.float32), ((48, n), np.float64),
+                             ((2, 24, n), np.float32)):
+            a = jnp.asarray(make_phi_matrix(
+                rng, int(np.prod(shape[:-1])), n,
+                dtype=dtype).reshape(shape))
+            for axis in (0, 1):
+                x = a if axis == 0 else jnp.swapaxes(a, -1, -2)
+                sp_k = ops.split_fused(x, k, beta, mode=mode, axis=axis)
+                sp_l = lib(x, k, beta=beta, axis=axis)
+                np.testing.assert_array_equal(np.asarray(sp_k.digits),
+                                              np.asarray(sp_l.digits))
+                np.testing.assert_array_equal(np.asarray(sp_k.gbase),
+                                              np.asarray(sp_l.gbase))
+                np.testing.assert_array_equal(np.asarray(sp_k.scale),
+                                              np.asarray(sp_l.scale))
+
+
 @pytest.mark.parametrize("mode,lib", [("bitmask", split_bitmask),
                                       ("rn_const", split_rn_const)])
 def test_split_fused_f64_and_batched_matches_library(rng, mode, lib):

@@ -1,0 +1,327 @@
+"""Adversarial accuracy oracle: every spec family vs the double-double
+reference on a hostile input grid.
+
+The grid goes after the places emulation schemes break: wide per-element
+exponent spread (digit grids far from most elements), signed cancellation
+(output magnitudes far below the operand scale), rows/columns hundreds of
+orders of magnitude below the matrix maximum (incl. subnormal entries),
+and exact zero rows/columns.  Three families of assertions:
+
+  * **documented bounds** — every variant's measured elementwise error
+    stays under its documented deterministic bound
+    (``repro.core.analysis``): eq. (18)-based for the ozimmu family,
+    the global-anchor OS-II bound for oz2 (``error_bound_oz2``).
+  * **planner guarantee** — ``auto`` k never yields a measured relative
+    error above ``OzimmuConfig.target_eps`` on the oracle grid, for every
+    variant including both oz2 modes.
+  * **oz2 plan economy (acceptance)** — ``oz2_h-auto:fast`` meets
+    ``target_eps`` while its :class:`repro.core.plan.Plan` charges
+    strictly fewer int8 GEMMs and high-precision adds than the
+    equal-accuracy ``ozimmu_h-auto`` plan.
+
+Domain note (documented in docs/engine.md): the ``df32``/``f32``
+accumulators hold scales in f32, so their bounds apply on operands whose
+row/column maxima stay within the f32 exponent range; the hostile grid
+therefore scopes its extreme-magnitude cases (2^-300 rows, subnormals) to
+the ``f64`` accumulator and uses a 2^-40 version for the f32-based ones.
+
+Everything random is drawn from explicitly seeded generators so the
+measured errors — and hence these assertions — are reproducible across
+the CI matrix.
+"""
+import functools
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from benchmarks.exact import _two_prod, dd_matmul, max_relative_error
+from repro.core import (VARIANTS, analysis, ozimmu_matmul, parse_spec, plan)
+from tests.conftest import make_phi_matrix
+
+U = {"f64": 2.0 ** -53, "df32": 2.0 ** -48, "f32": 2.0 ** -24}
+
+BOUNDS = {
+    "ozimmu": lambda a, b, k, u, fast: analysis.error_bound_ozimmu(a, b, k, u),
+    "ozimmu_rn": lambda a, b, k, u, fast: analysis.error_bound_rn(a, b, k, u),
+    "ozimmu_ef": lambda a, b, k, u, fast:
+        analysis.error_bound_group_ef(a, b, k, u),
+    "ozimmu_h": lambda a, b, k, u, fast: analysis.error_bound_rn(a, b, k, u),
+    "oz2_b": lambda a, b, k, u, fast:
+        analysis.error_bound_oz2(a, b, k, fast, u),
+    "oz2_h": lambda a, b, k, u, fast:
+        analysis.error_bound_oz2(a, b, k, fast, u),
+}
+
+
+# ---------------------------------------------------------------------------
+# hostile input generators
+# ---------------------------------------------------------------------------
+
+def _wide_spread(rng, m, n, bits):
+    """|a_ij| spanning ``bits`` binary orders of magnitude, signed."""
+    e = rng.integers(-bits, 1, (m, n)).astype(np.float64)
+    sign = np.where(rng.uniform(size=(m, n)) < 0.5, -1.0, 1.0)
+    return sign * rng.uniform(0.5, 1.0, (m, n)) * 2.0 ** e
+
+
+def _cancelling_pair(rng, m, n, p):
+    """C = A @ B with catastrophic cancellation: the left operand's column
+    halves nearly negate each other against a duplicated right operand."""
+    v = rng.standard_normal((m, n // 2))
+    a = np.concatenate([v, -v + 1e-9 * rng.standard_normal(v.shape)], axis=1)
+    w = rng.standard_normal((n // 2, p))
+    return a, np.concatenate([w, w], axis=0)
+
+
+def _scaled_rows(rng, m, n, lo):
+    """Rows scattered down to 2^lo below the matrix maximum."""
+    a = rng.standard_normal((m, n))
+    return a * 2.0 ** rng.integers(lo, 1, (m, 1)).astype(np.float64)
+
+
+def _zeros_mixed(rng, m, n):
+    a = rng.standard_normal((m, n))
+    a[0] = 0.0
+    a[:, 3] = 0.0
+    a[-1, ::2] = 0.0
+    return a
+
+
+@functools.lru_cache(maxsize=4)
+def _hostile_cases(f32_domain: bool):
+    """[(name, A, B, dd_hi, dd_lo)] — cached: every parametrized case
+    reuses one deterministic grid and its double-double reference."""
+    rng = np.random.default_rng(20260728)
+    m, n, p = 40, 160, 24
+    lo = -40 if f32_domain else -300
+    cases = [
+        ("spread", _wide_spread(rng, m, n, 30), _wide_spread(rng, n, p, 30)),
+        ("cancel", *_cancelling_pair(rng, m, n, p)),
+        ("tiny_rows_cols", _scaled_rows(rng, m, n, lo),
+         np.ascontiguousarray(_scaled_rows(rng, p, n, lo).T)),
+        ("zeros", _zeros_mixed(rng, m, n),
+         np.ascontiguousarray(_zeros_mixed(rng, p, n).T)),
+        ("phi2", make_phi_matrix(rng, m, n, phi=2.0),
+         make_phi_matrix(rng, n, p, phi=2.0)),
+    ]
+    return [(name, a, b, *dd_matmul(a, b)) for name, a, b in cases]
+
+
+def _modes(variant):
+    return (False, True) if variant.startswith("oz2") else (False,)
+
+
+# ---------------------------------------------------------------------------
+# documented bounds on the hostile grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("accum", ["f64", "df32", "f32"])
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_documented_bound_on_hostile_grid(variant, accum):
+    """measured elementwise |err| <= the variant's documented bound, for
+    every hostile case, both oz2 modes, k = 8."""
+    k = 8
+    for name, a, b, hi, lo in _hostile_cases(accum != "f64"):
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for fast in _modes(variant):
+            cfg = VARIANTS[variant].with_(k=k, accum_dtype=accum, fast=fast)
+            t = np.asarray(ozimmu_matmul(aj, bj, cfg))
+            err = np.abs((t - hi) - lo)
+            bound = BOUNDS[variant](a, b, k, U[accum], fast)
+            excess = (err - bound).max()
+            assert np.all(err <= bound + 1e-300), \
+                (variant, accum, name, fast, f"excess {excess:.3e}")
+
+
+def test_subnormal_entries_f64_bound(rng):
+    """Entries down in the subnormal range (via rows at 2^-1040): digits
+    below the grid extract as exact zeros, the documented f64 bounds
+    hold."""
+    gen = np.random.default_rng(20260729)
+    a = _scaled_rows(gen, 24, 96, -300)
+    a[1] = np.ldexp(gen.standard_normal(96), -1040)
+    b = np.ascontiguousarray(_scaled_rows(gen, 16, 96, -300).T)
+    hi, lo = dd_matmul(a, b)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    for variant in sorted(VARIANTS):
+        for fast in _modes(variant):
+            cfg = VARIANTS[variant].with_(k=8, fast=fast)
+            t = np.asarray(ozimmu_matmul(aj, bj, cfg))
+            err = np.abs((t - hi) - lo)
+            bound = BOUNDS[variant](a, b, 8, U["f64"], fast)
+            assert np.all(err <= bound + 1e-300), (variant, fast)
+
+
+# ---------------------------------------------------------------------------
+# planner guarantee (auto-k) on the oracle grid
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _planner_grid():
+    rng = np.random.default_rng(20260730)
+    n = 128
+    mats = [make_phi_matrix(rng, n, n, phi) for phi in (0.5, 2.0)
+            for _ in (0, 1)]
+    mats += [_wide_spread(rng, n, n, 12), _wide_spread(rng, n, n, 12)]
+    out = []
+    for i in range(0, len(mats), 2):
+        a, b = mats[i], mats[i + 1]
+        out.append((a, b, *dd_matmul(a, b)))
+    return out
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_planner_target_eps_guarantee(variant):
+    """`auto` never picks a k whose measured relative error (dd oracle)
+    exceeds target_eps — phi matrices AND moderate-spread operands, both
+    oz2 modes included."""
+    eps = plan.DEFAULT_TARGET_EPS
+    for a, b, hi, lo in _planner_grid():
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for fast in _modes(variant):
+            cfg = VARIANTS[variant].with_(auto_k=True, fast=fast)
+            k = plan.auto_k(aj, bj, cfg)
+            err = max_relative_error(
+                np.asarray(ozimmu_matmul(aj, bj, cfg)), hi, lo)
+            assert err <= eps, (variant, fast, k, err)
+
+
+# ---------------------------------------------------------------------------
+# oz2 plan economy — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_oz2_fast_auto_cheaper_than_equal_accuracy_ozimmu_h():
+    """`oz2_h-auto:fast` meets target_eps on the oracle grid while its
+    Plan charges strictly fewer int8 GEMMs and strictly fewer
+    high-precision adds than the equal-accuracy `ozimmu_h-auto` plan
+    (phi >= 1 cells; at phi=0.5 the two models converge to the same k and
+    oz2 still wins strictly on adds, never losing on GEMMs)."""
+    rng = np.random.default_rng(20260731)
+    n = 256
+    cfg_oz2 = parse_spec("oz2_h-auto:fast")
+    cfg_h = parse_spec("ozimmu_h-auto")
+    eps = plan.DEFAULT_TARGET_EPS
+    for phi in (0.5, 1.0, 2.0):
+        a = make_phi_matrix(rng, n, n, phi)
+        b = make_phi_matrix(rng, n, n, phi)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        pl_oz2 = plan.plan_contraction(cfg_oz2, n, n, n, a=aj, b=bj)
+        pl_h = plan.plan_contraction(cfg_h, n, n, n, a=aj, b=bj)
+        assert pl_oz2.highprec_adds < pl_h.highprec_adds, phi
+        assert pl_oz2.int8_gemms <= pl_h.int8_gemms, phi
+        if phi >= 1.0:
+            assert pl_oz2.int8_gemms < pl_h.int8_gemms, phi
+        hi, lo = dd_matmul(a, b)
+        err = max_relative_error(
+            np.asarray(ozimmu_matmul(aj, bj, cfg_oz2)), hi, lo)
+        assert err <= eps, (phi, pl_oz2.k, err)
+
+
+def test_oz2_ladder_adds_strictly_fewer_at_equal_k():
+    """At any fixed k >= 3, the oz2 exponent ladder performs strictly
+    fewer high-precision adds than ozimmu_h's group-EF accounting — the
+    structural consequence of folding the shared grid."""
+    for n in (128, 1024, 4096):
+        for k in range(3, 13):
+            p_oz2 = plan.plan_contraction(
+                VARIANTS["oz2_h"].with_(k=k, fast=True), n, n, n)
+            p_h = plan.plan_contraction(
+                VARIANTS["ozimmu_h"].with_(k=k), n, n, n)
+            assert p_oz2.highprec_adds < p_h.highprec_adds, (n, k)
+            assert p_oz2.int8_gemms == p_h.int8_gemms  # same band at same k
+
+
+def test_oz2_rn_endpoint_digits_no_int32_wrap():
+    """Regression: RN digits ATTAIN ±2^(beta-1), so eq. (12)'s power-of-two
+    r would let a constant-sign chunk sum reach exactly +2^31 and wrap.
+    ``compute_r`` with explicit digit_bits shaves one pair; on the
+    adversarial all-endpoint operand the error must stay at the
+    truncation level (it was ~2^32 * scale above it with the wrap)."""
+    from repro.core.splitting import compute_beta, compute_r
+    n = 65536
+    assert compute_beta(n) == 7
+    assert compute_r(n, 7, 6) * n * 64 * 64 < 2 ** 31  # the shaved r
+    x = sum(63.5 * 2.0 ** (-14 * j) for j in range(4))  # ±64 digits
+    a = np.full((2, n), x)
+    for sign in (1.0, -1.0):
+        b = np.full((n, 2), sign * x)
+        hi, lo = dd_matmul(a, b)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for variant in ("oz2_h", "oz2_b"):
+            for fast in (False, True):
+                cfg = VARIANTS[variant].with_(k=8, fast=fast)
+                t = np.asarray(ozimmu_matmul(aj, bj, cfg))
+                err = np.abs((t - hi) - lo)
+                bound = BOUNDS[variant](a, b, 8, U["f64"], fast)
+                assert np.all(err <= bound), (sign, variant, fast,
+                                              err.max(), bound.max())
+
+
+# ---------------------------------------------------------------------------
+# oz2 spec grammar
+# ---------------------------------------------------------------------------
+
+def test_oz2_spec_grammar():
+    cfg = parse_spec("oz2_h-auto:fast:fused@model/df32")
+    assert cfg.split == "oz2_rn" and cfg.accumulate == "oz2"
+    assert cfg.fast and cfg.auto_k and cfg.use_pallas == "fused"
+    assert cfg.mesh_axis == "model" and cfg.mesh_reduce == "df32"
+    assert parse_spec("oz2_b-8").split == "oz2_bitmask"
+    assert not parse_spec("oz2_h-8").fast
+    assert parse_spec("oz2_h-8:df32:fast").accum_dtype == "df32"
+    from repro.core import make_engine
+    for bad in ("ozimmu_h-8:fast", "oz2_h-8:fast:fast", "oz2_x-8",
+                "oz2_h-8:slow"):
+        with pytest.raises(ValueError):
+            make_engine(bad)
+
+
+# ---------------------------------------------------------------------------
+# the oracle itself: dd_matmul micro-pins
+# ---------------------------------------------------------------------------
+
+def test_dd_matmul_integer_fsum_pin(rng):
+    """Integer-valued inputs: products are exact, so dd hi must equal the
+    correctly-rounded math.fsum exactly and lo must vanish."""
+    a = rng.integers(-50, 50, (5, 24)).astype(np.float64)
+    b = rng.integers(-50, 50, (24, 3)).astype(np.float64)
+    hi, lo = dd_matmul(a, b)
+    for i in range(5):
+        for j in range(3):
+            fs = math.fsum(a[i, k] * b[k, j] for k in range(24))
+            assert hi[i, j] == fs and lo[i, j] == 0.0, (i, j)
+
+
+def test_dd_matmul_float_fsum_pin(rng):
+    """Float inputs: expand each product into its exact (p, e) Dekker pair
+    and fsum the 2n floats — the correctly-rounded true sum.  dd (hi, lo)
+    must agree with it up to fsum's own final rounding (half an ulp of
+    fs) plus dd's ~2^-106 effective precision on the term magnitude —
+    i.e. dd is at least as accurate as the correctly-rounded f64 sum."""
+    a = rng.standard_normal((4, 20)) * np.exp(2 * rng.standard_normal((4, 20)))
+    b = rng.standard_normal((20, 3)) * np.exp(2 * rng.standard_normal((20, 3)))
+    hi, lo = dd_matmul(a, b)
+    for i in range(4):
+        for j in range(3):
+            terms = []
+            for k in range(20):
+                pr, er = _two_prod(np.float64(a[i, k]), np.float64(b[k, j]))
+                terms += [float(pr), float(er)]
+            fs = math.fsum(terms)
+            scale = sum(abs(t) for t in terms) or 1.0
+            assert abs((hi[i, j] - fs) + lo[i, j]) <= \
+                2.0 ** -53 * abs(fs) + 2.0 ** -100 * scale
+
+
+def test_dd_matmul_block_invariant(rng):
+    """Blocking is pure dispatch batching: every block size returns the
+    same bits (the TwoSum order is the column order regardless)."""
+    a = rng.standard_normal((17, 130))
+    b = rng.standard_normal((130, 9))
+    hi1, lo1 = dd_matmul(a, b, block=1)
+    for blk in (7, 32, 130, 999):
+        hi, lo = dd_matmul(a, b, block=blk)
+        assert np.array_equal(hi, hi1) and np.array_equal(lo, lo1), blk

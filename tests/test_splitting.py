@@ -9,10 +9,22 @@ from tests.conftest import hypothesis_or_stubs
 given, settings, st = hypothesis_or_stubs()
 
 from repro.core import (compute_beta, compute_r, split_bitmask, split_rn,
-                        split_rn_const, reconstruct, residual)
+                        split_rn_const, split_oz2, split_oz2_bitmask,
+                        reconstruct, residual)
 from tests.conftest import make_phi_matrix
 
 SPLITTERS = {"bitmask": split_bitmask, "rn": split_rn, "rn_const": split_rn_const}
+OZ2_SPLITTERS = {"oz2_rn": split_oz2, "oz2_bitmask": split_oz2_bitmask}
+ALL_SPLITTERS = {**SPLITTERS, **OZ2_SPLITTERS}
+# digit magnitude budget per splitter: truncation spans the full
+# +-(2^beta - 1) range, round-to-nearest half of it
+DIGIT_LIMIT = {
+    "bitmask": lambda beta: 2 ** beta - 1,
+    "oz2_bitmask": lambda beta: 2 ** beta - 1,
+    "rn": lambda beta: 2 ** (beta - 1),
+    "rn_const": lambda beta: 2 ** (beta - 1),
+    "oz2_rn": lambda beta: 2 ** (beta - 1),
+}
 
 
 def test_compute_beta_matches_paper():
@@ -169,3 +181,124 @@ def test_property_mixed_magnitudes(seed, k):
         res = np.abs(np.asarray(residual(s, aj)))
         rowmax = np.max(np.abs(a), axis=1, keepdims=True)
         assert np.all(res <= rowmax * 2.0 ** (-s.beta * k + 2) + 1e-300)
+
+
+# ---------------------------------------------------------------------------
+# oz2 constant-scaling splits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(OZ2_SPLITTERS))
+@pytest.mark.parametrize("axis", [0, 1])
+def test_oz2_shared_grid_structure(rng, name, axis):
+    """One grid for the whole matrix: every row's scale vector is the same
+    scalar, exposed as ``gbase``, and the geometric ladder holds."""
+    a = jnp.asarray(make_phi_matrix(rng, 24, 48, phi=1.5))
+    s = OZ2_SPLITTERS[name](a, 6, axis=axis)
+    sc = np.asarray(s.scale)
+    assert s.gbase is not None and np.asarray(s.gbase).shape == ()
+    base = np.asarray(s.base)
+    assert np.all(base == np.asarray(s.gbase))          # broadcast scalar
+    for i in range(6):
+        np.testing.assert_array_equal(sc[i], base * 2.0 ** (-s.beta * (i + 1)))
+    d = np.asarray(s.digits, np.int32)
+    assert np.max(np.abs(d)) <= DIGIT_LIMIT[name](s.beta)
+
+
+def test_oz2_global_anchor_rows_below_grid(rng):
+    """Rows far below the global maximum fall off the shared grid: their
+    digits are exactly zero and the residual is the row itself — the
+    documented price of constant scaling (docs/algorithms.md)."""
+    a = rng.standard_normal((6, 32))
+    a[2] *= 2.0 ** -120          # below the k*beta window of the top row
+    aj = jnp.asarray(a)
+    for fn in OZ2_SPLITTERS.values():
+        s = fn(aj, 8)            # 56-bit window
+        d = np.asarray(s.digits, np.int32)
+        assert np.all(d[:, 2, :] == 0)
+        res = np.asarray(residual(s, aj))
+        np.testing.assert_array_equal(res[2], a[2])
+    # per-row splitters keep resolving such rows
+    s = split_rn_const(aj, 8)
+    assert np.any(np.asarray(s.digits, np.int32)[:, 2, :] != 0)
+
+
+def test_oz2_zero_matrix_and_batch(rng):
+    z = split_oz2(jnp.zeros((4, 8)), 3)
+    assert np.all(np.asarray(z.digits) == 0)
+    assert np.all(np.isfinite(np.asarray(z.scale)))
+    ab = jnp.asarray(rng.standard_normal((3, 5, 16)))
+    s = split_oz2(ab, 4)
+    assert np.asarray(s.gbase).shape == (3,)
+    # per-batch grids: each batch element anchored at its own global max
+    for i in range(3):
+        si = split_oz2(ab[i], 4)
+        np.testing.assert_array_equal(np.asarray(s.digits)[:, i],
+                                      np.asarray(si.digits))
+
+
+# ---------------------------------------------------------------------------
+# property-based EFT invariants (satellite: splitter error-free-transform
+# guarantees for every splitter, across dtypes/shapes/batch dims)
+# ---------------------------------------------------------------------------
+
+def _sequential_reconstruct(s) -> np.ndarray:
+    """Slice sum in ascending slice order with numpy (deterministic
+    addition order — each partial sum is a rounding of `a` to that slice's
+    grid, hence exactly representable; see the EFT argument below)."""
+    d = np.asarray(s.digits, np.float64)
+    sc = np.asarray(s.scale, np.float64)
+    rec = np.zeros(d.shape[1:], np.float64)
+    for i in range(d.shape[0]):
+        rec = rec + d[i] * (sc[i][..., :, None] if s.axis == 0
+                            else sc[i][..., None, :])
+    return rec
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 10), n=st.integers(1, 32), k=st.integers(1, 9),
+    nb=st.integers(0, 2), axis=st.integers(0, 1),
+    dtype=st.sampled_from(["f32", "f64"]), phi=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31),
+)
+def test_property_eft_invariants_all_splitters(m, n, k, nb, axis, dtype,
+                                               phi, seed):
+    """The error-free-transform contract of every splitter, every dtype,
+    with and without batch dims:
+
+      * ``reconstruct(split) + residual == a`` EXACTLY (bitwise): each
+        partial slice sum is the input rounded/truncated to that slice's
+        power-of-two grid — representable — so the additions and the final
+        residual subtraction never round;
+      * every scale is a power of two (frexp mantissa exactly 0.5);
+      * every digit is int-representable within the splitter's mantissa
+        budget (trunc: 2^beta - 1; RN: 2^(beta-1)).
+    """
+    rng = np.random.default_rng(seed)
+    np_dtype = np.float32 if dtype == "f32" else np.float64
+    batch = (2,) * nb
+    a = make_phi_matrix(rng, int(np.prod(batch, initial=1)) * m, n, phi,
+                        dtype=np_dtype).reshape(batch + (m, n))
+    aj = jnp.asarray(a)
+    wide = np.float64
+    for name, fn in ALL_SPLITTERS.items():
+        s = fn(aj, k, axis=axis)
+        # digits within the mantissa budget
+        d = np.asarray(s.digits, np.int32)
+        assert np.max(np.abs(d), initial=0) <= DIGIT_LIMIT[name](s.beta), \
+            name
+        # scales pow2-exact
+        sc = np.asarray(s.scale)
+        mant, _ = np.frexp(sc[sc != 0])
+        assert np.all(mant == 0.5), name
+        # exact EFT: reconstruct + residual == a, bitwise
+        rec = _sequential_reconstruct(s)
+        res = a.astype(wide) - rec
+        assert np.array_equal(rec + res, a.astype(wide)), name
+        # and the residual is the scheme's V_k: below the last grid
+        limit = 2.0 ** (-s.beta * k + 2)
+        anchor = np.max(np.abs(a), axis=-1 if axis == 0 else -2,
+                        keepdims=True).astype(wide)
+        if name.startswith("oz2"):
+            anchor = np.max(anchor, axis=(-1, -2), keepdims=True)
+        assert np.all(np.abs(res) <= anchor * limit + 1e-300), name
