@@ -1,0 +1,222 @@
+"""Serving bench: offline request-trace replay through the runtime.
+
+Replays a deterministic Poisson-arrival trace of mixed prompt/generation
+lengths through three configurations per engine:
+
+  legacy    the pre-runtime serve loop (fixed synchronized waves of
+            ``slots`` requests: per-position prefill of the padded wave,
+            then max-generation decode for everyone — useful tokens only
+            are counted, exactly what that loop delivered)
+  uncached  the continuous-batching runtime with the weight split-cache
+            DISABLED (every decode step re-splits the weights)
+  cached    the runtime with the split-cache on (the default)
+
+and emits tokens/s + TTFT + split-cache savings rows, plus the
+deterministic v5e decode-step phase model showing the weight-side
+splitter cost going to ~0 under the cache
+(``model_v5e.decode_phase_times``).  Arrivals are measured in scheduler
+rounds (offline replay is CPU-speed independent; Poisson gaps stagger
+admissions so the continuous refill path is exercised).
+
+Headline + regression gate: ``benchmarks/run.py`` (``--only serving``;
+the gate checks the split-cache hit rate and bench health — wall-clock
+speedups are recorded, not gated, because CI machines are noisy).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+ARCH = "internlm2_1_8b"
+SLOTS = 4
+MAX_LEN = 96
+
+
+def make_trace(rng: np.random.Generator, n_requests: int, vocab: int,
+               max_len: int, mean_gap_steps: float = 2.0) -> List[dict]:
+    """Deterministic mixed-length request trace with Poisson arrivals.
+
+    Prompt lengths are log-uniform-ish in [4, max_len // 3]; generation
+    budgets uniform in [4, max_len // 3]; arrival_step is the scheduler
+    round at which the request enters the queue (cumulative exponential
+    gaps — Poisson arrivals in round-time).
+    """
+    hi = max(6, max_len // 3)
+    out, t = [], 0.0
+    for _ in range(n_requests):
+        plen = int(np.exp(rng.uniform(np.log(4), np.log(hi))))
+        gen = int(rng.integers(4, hi))
+        t += rng.exponential(mean_gap_steps)
+        out.append({
+            "prompt": rng.integers(0, vocab, size=plen, dtype=np.int32),
+            "max_new": gen,
+            "arrival_step": int(t),
+        })
+    return out
+
+
+def legacy_generate(cfg, model, params, prompts, gens, slots, max_len):
+    """The pre-runtime serve loop (launch/serve.py before the serving
+    subsystem): synchronized waves of ``slots`` requests — per-position
+    prefill of the wave's padded prompts, then one decode step per token
+    up to the wave's LONGEST generation budget.  Returns useful tokens."""
+    import jax
+    import jax.numpy as jnp
+
+    decode = jax.jit(
+        lambda c, t, n: model.decode_step(params, cfg, c, t, n))
+    outs = []
+    for w0 in range(0, len(prompts), slots):
+        wave = prompts[w0:w0 + slots]
+        wave_gens = gens[w0:w0 + slots]
+        B = len(wave)
+        wave = wave + [wave[-1]] * (slots - B)
+        max_prompt = max(len(p) for p in wave)
+        cache = model.init_cache(cfg, slots, max_len, params=params,
+                                 ctx=None)
+        toks = np.zeros((slots, max_prompt), np.int32)
+        for i, p in enumerate(wave):
+            toks[i, :len(p)] = p
+        logits = None
+        for t in range(max_prompt):
+            logits, cache = decode(cache, jnp.asarray(toks[:, t:t + 1]),
+                                   jnp.asarray(t + 1, jnp.int32))
+        gen_out = [[] for _ in range(B)]
+        cur = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(
+            jnp.int32)
+        for g in range(max(wave_gens)):
+            for i in range(B):
+                if g < wave_gens[i]:
+                    gen_out[i].append(int(cur[i]))
+            logits, cache = decode(cache, cur[:, None],
+                                   jnp.asarray(max_prompt + g + 1,
+                                               jnp.int32))
+            cur = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1).astype(
+                jnp.int32)
+        outs.extend(gen_out)
+    return outs
+
+
+def replay(runtime, trace) -> dict:
+    """Drive the runtime, submitting each request at its arrival round
+    (Poisson-staggered admissions exercise the continuous slot refill)."""
+    pending = sorted(trace, key=lambda r: r["arrival_step"])
+    i, step = 0, 0
+    while i < len(pending) or not runtime.sched.all_done:
+        while i < len(pending) and pending[i]["arrival_step"] <= step:
+            runtime.submit(pending[i]["prompt"], pending[i]["max_new"])
+            i += 1
+        runtime.step()
+        step += 1
+    return runtime.run()  # idle: finalizes and returns the summary
+
+
+def main(out_json: Optional[str] = None, quick: bool = False):
+    import jax
+
+    from benchmarks import model_v5e
+    from repro import configs
+    from repro.models import api
+    from repro.serving import ServingRuntime
+
+    engines = ["bf16", "ozimmu_h-4:df32"] if quick else \
+        ["bf16", "ozimmu_h-4:df32", "oz2_h-4:df32:fast"]
+    n_requests = 6 if quick else 10
+    rows = []
+    rng = np.random.default_rng(20260728)
+
+    for spec in engines:
+        cfg = configs.get_config(ARCH, smoke=True, engine_spec=spec)
+        model = api.get_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0), cfg)
+        trace = make_trace(rng, n_requests, cfg.vocab, MAX_LEN)
+        prompts = [r["prompt"] for r in trace]
+        gens = [r["max_new"] for r in trace]
+        useful = sum(gens)
+
+        # legacy baseline (pre-runtime loop).  All modes are timed in
+        # steady state: one warm pass compiles every step (the runtime's
+        # per-bucket prefill scans are the expensive traces), the second
+        # pass is measured — serving throughput is an amortized quantity.
+        legacy_generate(cfg, model, params, prompts, gens, SLOTS, MAX_LEN)
+        t0 = time.time()
+        legacy_out = legacy_generate(cfg, model, params, prompts, gens,
+                                     SLOTS, MAX_LEN)
+        legacy_dt = time.time() - t0
+        assert sum(len(o) for o in legacy_out) == useful
+
+        modes = [("uncached", False)] if cfg.engine.is_ozimmu else []
+        modes += [("cached", None)]
+        per_mode = {"legacy": {"tokens_per_s": useful / legacy_dt,
+                               "seconds": legacy_dt}}
+        for mode, presplit in modes:
+            runtime = ServingRuntime(cfg, params, slots=SLOTS,
+                                     max_len=MAX_LEN, presplit=presplit)
+            replay(runtime, trace)          # warm-up: compile all buckets
+            runtime.reset_metrics()
+            summary = replay(runtime, trace)
+            per_mode[mode] = {
+                "tokens_per_s": summary["tokens_per_s"],
+                "seconds": summary["elapsed_s"],
+                "ttft_mean_s": summary["ttft_s"]["mean"],
+                "ttft_p95_s": summary["ttft_s"]["p95"],
+                "split_cache": summary["split_cache"],
+            }
+            assert summary["tokens_generated"] == useful, \
+                (summary["tokens_generated"], useful)
+
+        cached = per_mode["cached"]["tokens_per_s"]
+        row = {
+            "bench": "serving", "arch": ARCH, "engine": spec,
+            "slots": SLOTS, "max_len": MAX_LEN, "requests": n_requests,
+            "useful_tokens": useful,
+            "modes": per_mode,
+            "runtime_over_legacy":
+                cached / per_mode["legacy"]["tokens_per_s"],
+            "cached_over_uncached":
+                (cached / per_mode["uncached"]["tokens_per_s"])
+                if "uncached" in per_mode else None,
+            "weight_split_hit_rate":
+                (per_mode["cached"]["split_cache"] or
+                 {}).get("weight_split_hit_rate"),
+        }
+        # deterministic v5e decode-step phase model: weight-splitter
+        # share with and without the split-cache
+        oz = cfg.engine.ozimmu_config
+        if oz is not None:
+            gemms = model_v5e.decode_weight_gemms(
+                4096, 11008, 32000, 32)       # full-size arch shapes
+            variant = spec.split("-")[0] + (
+                "_fast" if ":fast" in spec else "")
+            k = oz.k
+            resplit = model_v5e.decode_phase_times(
+                SLOTS, gemms, k, variant=variant,
+                accum_dtype=oz.accum_dtype, presplit_weights=False)
+            presplit_t = model_v5e.decode_phase_times(
+                SLOTS, gemms, k, variant=variant,
+                accum_dtype=oz.accum_dtype, presplit_weights=True)
+            row["modeled_decode"] = {
+                "split_share_resplit": resplit["split_share"],
+                "split_share_presplit": presplit_t["split_share"],
+                "step_speedup_presplit":
+                    resplit["total"] / presplit_t["total"],
+            }
+        rows.append(row)
+        print(f"[serving] {spec}: legacy "
+              f"{per_mode['legacy']['tokens_per_s']:.2f} tok/s, runtime "
+              f"cached {cached:.2f} tok/s "
+              f"(x{row['runtime_over_legacy']:.2f})"
+              + (f", cached/uncached x{row['cached_over_uncached']:.2f}"
+                 if row["cached_over_uncached"] else ""))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    main(out_json="experiments/bench/serving.json")

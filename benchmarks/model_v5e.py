@@ -121,3 +121,58 @@ def emulated_tflops(m: int, n: int, p: int, k: int, **kw) -> float:
     """Emulated-GEMM throughput: 2mnp / modeled time, in TFLOP/s."""
     t = phase_times(m, n, p, k, **kw).total
     return 2.0 * m * n * p / t / 1e12
+
+
+# ---------------------------------------------------------------------------
+# serving phase model: one decode step, with/without the weight split-cache
+# ---------------------------------------------------------------------------
+
+def decode_weight_gemms(d_model: int, d_ff: int, vocab: int,
+                        n_layers: int) -> list:
+    """(n, p) weight shapes of one decode step's projection GEMMs (GQA
+    transformer shape family: qkvo + swiglu per layer, plus the LM head).
+    The lhs of every one is the (slots, 1, d) activation sliver."""
+    per_layer = [(d_model, d_model)] * 4 + \
+        [(d_model, d_ff)] * 2 + [(d_ff, d_model)]
+    return per_layer * n_layers + [(d_model, vocab)]
+
+
+def decode_phase_times(slots: int, gemms: list, k: int, *, variant: str,
+                       accum_dtype: str = "df32", in_bytes: int = 4,
+                       presplit_weights: bool = False,
+                       fused_split: bool = True,
+                       fused_epilogue: bool = True) -> dict:
+    """Modeled seconds per serving decode step, split by phase AND by
+    operand side of the splitter.
+
+    At decode the A operand of every projection is a ``(slots, n)``
+    activation sliver while B is the full ``(n, p)`` weight — the B-side
+    extraction dominates the split phase by a factor ~p/slots.  With
+    ``presplit_weights`` (the serving split-cache) the B-side bytes drop
+    out entirely: only ``split_a`` remains, which is what "decode-time
+    splitter cost goes to ~0" means quantitatively
+    (``bench_serving`` emits both columns; docs/serving.md).
+
+    Delegates every phase formula to :func:`phase_times` (single source
+    of truth for the cost model); the only serving-specific math is
+    apportioning the split phase to its operand sides — both sides pay
+    the same per-element cost, so bytes split as ``m*n : n*p``.
+    """
+    t = {"split_a": 0.0, "split_b": 0.0, "gemm": 0.0, "accum": 0.0,
+         "copy": 0.0}
+    m = slots
+    for n, p in gemms:
+        pt = phase_times(m, n, p, k, variant=variant,
+                         accum_dtype=accum_dtype, in_bytes=in_bytes,
+                         fused_split=fused_split,
+                         fused_epilogue=fused_epilogue)
+        frac_a = (m * n) / (m * n + n * p)
+        t["split_a"] += pt.split * frac_a
+        if not presplit_weights:
+            t["split_b"] += pt.split * (1.0 - frac_a)
+        t["gemm"] += pt.gemm
+        t["accum"] += pt.accum
+        t["copy"] += pt.copy
+    t["total"] = sum(t.values())
+    t["split_share"] = (t["split_a"] + t["split_b"]) / t["total"]
+    return t

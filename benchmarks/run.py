@@ -23,7 +23,9 @@ import os
 import sys
 import time
 
-SUMMARY_SCHEMA_VERSION = 1
+# v2: added the `serving` bench (trace-replay tokens/s + TTFT +
+# split-cache savings; docs/benchmarks.md#serving)
+SUMMARY_SCHEMA_VERSION = 2
 
 
 def _headline_accuracy(rows):
@@ -97,12 +99,34 @@ def _headline_roofline(rows):
             "bound": {r["spec"]: r["bound"] for r in rows}}
 
 
+def _headline_serving(rows):
+    """Runtime-vs-legacy tokens/s, split-cache effect, and the modeled
+    decode-step splitter share under the weight split-cache, for the
+    first ozimmu engine row (wall-clock ratios are recorded for the
+    trajectory; the gate only checks the deterministic fields)."""
+    oz = [r for r in rows if r.get("cached_over_uncached") is not None]
+    if not oz:
+        return {}
+    r = oz[0]
+    return {
+        "engine": r["engine"], "slots": r["slots"],
+        "requests": r["requests"],
+        "tokens_per_s": {m: round(v["tokens_per_s"], 3)
+                         for m, v in r["modes"].items()},
+        "runtime_over_legacy": r["runtime_over_legacy"],
+        "cached_over_uncached": r["cached_over_uncached"],
+        "weight_split_hit_rate": r["weight_split_hit_rate"],
+        "modeled_decode": r.get("modeled_decode"),
+    }
+
+
 _HEADLINES = {
     "accuracy": _headline_accuracy,
     "breakdown": _headline_breakdown,
     "throughput": _headline_throughput,
     "pareto": _headline_pareto,
     "ozimmu_roofline": _headline_roofline,
+    "serving": _headline_serving,
 }
 
 
@@ -132,6 +156,19 @@ def check_against(summary: dict, committed_path: str, tol: float = 2.0):
             failures.append(
                 f"accuracy: {variant} err {new_err:.3e} exceeds "
                 f"{tol}x committed {ref_err:.3e}")
+    # serving gate (when both sides ran it): the weight split-cache must
+    # stay fully effective — a deterministic property, unlike the
+    # wall-clock ratios, which are recorded but not gated (CI noise).
+    srv = summary.get("benches", {}).get("serving")
+    srv_ref = committed.get("benches", {}).get("serving")
+    if srv is not None and srv.get("status") == "ok" and srv_ref:
+        got_rate = (srv.get("headline") or {}).get("weight_split_hit_rate")
+        want_rate = (srv_ref.get("headline") or {}
+                     ).get("weight_split_hit_rate")
+        if want_rate is not None and (got_rate or 0.0) < want_rate:
+            failures.append(
+                f"serving: weight split-cache hit rate {got_rate} fell "
+                f"below committed {want_rate}")
     for name, entry in summary["benches"].items():
         if entry.get("status") != "ok":
             failures.append(f"{name}: status {entry.get('status')!r} "
@@ -168,7 +205,7 @@ def main(argv=None):
 
     from benchmarks import (bench_accuracy, bench_breakdown,
                             bench_ozimmu_roofline, bench_pareto,
-                            bench_throughput)
+                            bench_serving, bench_throughput)
     benches = {
         "accuracy": bench_accuracy.main,
         "breakdown": bench_breakdown.main,
@@ -178,6 +215,8 @@ def main(argv=None):
         # (n=2048 keeps the harness fast; §Perf Cell C uses 4096/8192)
         "ozimmu_roofline": lambda out_json=None, quick=False:
             bench_ozimmu_roofline.main(out_json=out_json, quick=True),
+        # serving trace replay (continuous batching + weight split-cache)
+        "serving": bench_serving.main,
     }
     unknown = (set(args.only.split(",")) - set(benches)) if args.only else ()
     if unknown:

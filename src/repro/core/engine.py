@@ -54,11 +54,100 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import ozimmu
+from repro.core import ozimmu, splitting
 
-__all__ = ["MatmulEngine", "make_engine"]
+__all__ = ["MatmulEngine", "make_engine", "PresplitWeight"]
 
 _NATIVE = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f64": jnp.float64}
+
+
+class PresplitWeight:
+    """A weight array bundled with its frozen Ozaki Split (serving).
+
+    Registered as a pytree whose children are ``(array, digits, scale,
+    base, gbase)``, so it rides through ``jit`` / ``lax.scan`` xs /
+    ``vmap`` like any parameter leaf: a stacked wrapper (digits stored
+    with the stack axes LEADING, ``(*stack, k, n, p)``) slices down to
+    the per-layer wrapper automatically when the layer scan slices its
+    leaves.  Model code passes it to the engine unchanged; the engine
+    consumes the frozen split when the contraction matches the pattern
+    the split was frozen for (``x[..., n] @ w[n, p]`` — the projection
+    shape every model layer reduces to) and falls back to ``array``
+    otherwise, so wrapping is always safe.
+
+    Built by ``repro.serving.presplit.wrap_params`` from a
+    ``repro.core.split_cache.SplitCache``.
+    """
+
+    __slots__ = ("array", "digits", "scale", "base", "gbase", "beta",
+                 "split", "k")
+
+    def __init__(self, array, digits, scale, base, gbase, beta: int,
+                 split: str, k: int):
+        self.array, self.digits, self.scale = array, digits, scale
+        self.base, self.gbase = base, gbase
+        self.beta, self.split, self.k = beta, split, k
+
+    # array-facade so existing shape asserts keep working
+    @property
+    def shape(self):
+        return self.array.shape
+
+    @property
+    def ndim(self):
+        return self.array.ndim
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    def tree_flatten(self):
+        return ((self.array, self.digits, self.scale, self.base,
+                 self.gbase), (self.beta, self.split, self.k))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def usable_split(self, lhs, dimension_numbers, compute_dtype,
+                     cfg) -> Optional[splitting.Split]:
+        """The frozen Split iff it applies to this contraction, else None
+        (the engine then uses ``array`` — e.g. a stacked wrapper consumed
+        before the layer scan sliced it, or an unexpected dnums)."""
+        (ac, bc), (ab, bb) = dimension_numbers
+        simple = (tuple(ac) == (lhs.ndim - 1,) and tuple(bc) == (0,)
+                  and not ab and not bb)
+        if not (simple and self.array.ndim == 2 and self.digits.ndim == 3):
+            return None
+        if self.split != cfg.split or self.scale.dtype != compute_dtype:
+            return None
+        if not cfg.auto_k and self.k != cfg.k:
+            return None
+        n = self.array.shape[0]
+        if self.beta != splitting.compute_beta(n):
+            return None
+        return splitting.Split(self.digits, self.scale, self.base,
+                               self.beta, 1, gbase=self.gbase)
+
+
+jax.tree_util.register_pytree_node(
+    PresplitWeight,
+    lambda w: w.tree_flatten(),
+    PresplitWeight.tree_unflatten)
+
+
+# Trace-time consumption counters: every engine contraction that received
+# a PresplitWeight records whether the frozen split applied or fell back
+# to re-splitting.  Incremented while TRACING (or on eager calls), so a
+# compiled step that used the split at trace time uses it on every
+# execution — the serving runtime turns the delta into the measured
+# weight-split hit rate the bench gate checks (a hardcoded 1.0 would go
+# vacuous the moment `usable_split` started silently falling back).
+_PRESPLIT_COUNTS = {"used": 0, "fallback": 0}
+
+
+def presplit_trace_counts() -> dict:
+    return dict(_PRESPLIT_COUNTS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +174,18 @@ class MatmulEngine:
                     out_dtype=None) -> jax.Array:
         """Contract ``lhs`` with ``rhs`` under standard lax dimension
         numbers.  Returns ``lhs.dtype`` unless ``out_dtype`` is given (e.g.
-        f32 attention scores feeding an online softmax)."""
+        f32 attention scores feeding an online softmax).
+
+        ``rhs`` may be a :class:`PresplitWeight` (serving): when the
+        contraction matches the frozen split's pattern, the B-side
+        splitter is skipped (bit-identical — see
+        ``repro.core.split_cache``); otherwise the wrapped array is used
+        like any weight."""
+        if isinstance(lhs, PresplitWeight):
+            lhs = lhs.array
+        presplit = None
+        if isinstance(rhs, PresplitWeight):
+            rhs, presplit = rhs.array, rhs
         out_dtype = out_dtype or lhs.dtype
         if not self.is_ozimmu:
             dt = _NATIVE[self.spec]
@@ -102,9 +202,15 @@ class MatmulEngine:
         # docstring — the "silent f64 -> f32" footgun).
         compute_dtype = jnp.float64 if cfg.accum_dtype == "f64" and \
             jax.config.jax_enable_x64 else jnp.float32
+        sp = None
+        if presplit is not None:
+            sp = presplit.usable_split(lhs, dimension_numbers,
+                                       jnp.dtype(compute_dtype), cfg)
+            _PRESPLIT_COUNTS["used" if sp is not None
+                             else "fallback"] += 1
         out = ozimmu.ozimmu_dot_general(
             lhs.astype(compute_dtype), rhs.astype(compute_dtype),
-            dimension_numbers, cfg)
+            dimension_numbers, cfg, rhs_presplit=sp)
         return out.astype(out_dtype)
 
     def __call__(self, x: jax.Array, w: jax.Array) -> jax.Array:

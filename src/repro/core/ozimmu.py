@@ -61,7 +61,7 @@ import jax.numpy as jnp
 from repro.core import accumulate, splitting
 
 __all__ = ["OzimmuConfig", "VARIANTS", "ozimmu_matmul", "ozimmu_dot_general",
-           "parse_spec"]
+           "parse_spec", "canonical_rhs"]
 
 DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
                          Tuple[Tuple[int, ...], Tuple[int, ...]]]
@@ -199,7 +199,8 @@ def parse_spec(spec: str) -> OzimmuConfig:
 
 
 def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
-                   n_total: Optional[int] = None, rowmax_reduce=None):
+                   n_total: Optional[int] = None, rowmax_reduce=None,
+                   rhs_presplit: Optional[splitting.Split] = None):
     """Step (i)+(ii): slice A row-wise and B column-wise.
 
     a (*batch, m, n), b (*batch, n, p) — scales are per batch element.
@@ -207,6 +208,12 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     ``a``/``b`` are per-device shards of a longer contraction;
     ``rowmax_reduce`` (e.g. a mesh-axis ``pmax``) then makes the digit
     grids globally agreed — see docs/distributed.md.
+
+    ``rhs_presplit`` short-circuits the B side entirely: a frozen
+    column-scale :class:`~repro.core.splitting.Split` (from
+    ``repro.core.split_cache``) is used as-is and only A is split — the
+    serving-time path where B is a static weight matrix.  ``b`` may then
+    be ``None``.
 
     With ``cfg.use_pallas == "fused"`` the extraction runs through the
     one-HBM-pass Pallas kernel (``kernels.ops.split_fused``) for the
@@ -223,18 +230,23 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
         from repro.kernels import ops as kops  # lazy: kernels are optional
         sa = kops.split_fused(a, cfg.k, beta, mode=cfg.split, axis=0,
                               rowmax_reduce=rowmax_reduce)
+        if rhs_presplit is not None:
+            return sa, rhs_presplit
         sb = kops.split_fused(b, cfg.k, beta, mode=cfg.split, axis=1,
                               rowmax_reduce=rowmax_reduce)
         return sa, sb
     splitter = _SPLITTERS[cfg.split]
     sa = splitter(a, cfg.k, beta=beta, axis=0, rowmax_reduce=rowmax_reduce)
+    if rhs_presplit is not None:
+        return sa, rhs_presplit
     sb = splitter(b, cfg.k, beta=beta, axis=1, rowmax_reduce=rowmax_reduce)
     return sa, sb
 
 
 def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
                n_total: Optional[int] = None, rowmax_reduce=None,
-               product_reduce=None, partial: bool = False):
+               product_reduce=None, partial: bool = False,
+               rhs_presplit: Optional[splitting.Split] = None):
     """Single-device emulated batched matmul (the shard-local body of the
     mesh-native path when the distributed hooks are given).
 
@@ -243,9 +255,12 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     (``split_operands`` above) and the convert→scale→add epilogue with the
     one-HBM-pass kernels — every stage bit-identical to the XLA path, so
     the distributed hooks and ``partial`` compose unchanged.
+    ``rhs_presplit`` (serving): B's frozen Split; the B-side splitter is
+    skipped entirely and ``b`` may be ``None``.
     """
     sa, sb = split_operands(a, b, cfg, n_total=n_total,
-                            rowmax_reduce=rowmax_reduce)
+                            rowmax_reduce=rowmax_reduce,
+                            rhs_presplit=rhs_presplit)
     group_gemm_fn = scale_accum_fn = pair_gemm_fn = None
     if cfg.use_pallas:
         from repro.kernels import ops as kops  # lazy: kernels are optional
@@ -280,7 +295,7 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
 
 @functools.lru_cache(maxsize=256)
 def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
-                out_dtype) -> "callable":
+                out_dtype, presplit_meta=None) -> "callable":
     """The jitted shard_map callable for one (config, mesh, rank) cell.
 
     Cached so repeated *eager* mesh-native contractions reuse one
@@ -288,28 +303,53 @@ def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
     per call (which would defeat jit's own cache); the jit is needed at
     all because eager shard_map is NotImplemented for some collective/dot
     patterns on older JAX.  Inside an outer jit it inlines for free.
+
+    ``presplit_meta`` (serving): ``(beta, has_base, has_gbase)`` of a
+    frozen B-side Split — the callable then takes ``(a, (digits, scale,
+    base, gbase))`` with the cached digit slices sharded along their
+    contraction axis (they "live pre-sharded": splitting is elementwise
+    given the grid, so the shard of the full-matrix digits equals the
+    pmax-agreed shard-local split) and skips the B splitter entirely.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import collectives, compat
 
     axis = cfg.mesh_axis
-    in_specs = (P(*((None,) * (nb + 1) + (axis,))),
-                P(*((None,) * nb + (axis, None))))
+    a_spec = P(*((None,) * (nb + 1) + (axis,)))
     out_specs = P(*((None,) * (nb + 2)))
     local_cfg = cfg.local()
 
+    if presplit_meta is None:
+        in_specs = (a_spec, P(*((None,) * nb + (axis, None))))
+        unpack = lambda operand: (operand, None)
+    else:
+        beta, has_base, has_gbase = presplit_meta
+        # digits (k, *batch, n, p) shard on n; scales/bases replicated
+        in_specs = (a_spec,
+                    (P(*((None,) * (nb + 1) + (axis, None))), P(),
+                     P() if has_base else None,
+                     P() if has_gbase else None))
+
+        def unpack(operand):
+            digits, scale, base, gbase = operand
+            return None, splitting.Split(digits, scale, base, beta, 1,
+                                         gbase=gbase)
+
     if cfg.mesh_reduce == "int32":
-        def body(al, bl):
+        def body(al, operand):
+            bl, sb = unpack(operand)
             return _bmm_local(
                 al, bl, local_cfg, n_total=n_total,
                 rowmax_reduce=lambda v: collectives.pmax_scales(v, axis),
                 product_reduce=lambda p: collectives.psum_exact_int32(
-                    p, axis))
+                    p, axis),
+                rhs_presplit=sb)
     else:
-        def body(al, bl):
+        def body(al, operand):
+            bl, sb = unpack(operand)
             part = _bmm_local(al, bl, local_cfg, n_total=n_total,
-                              partial=True)
+                              partial=True, rhs_presplit=sb)
             if isinstance(part, accumulate.DF32):
                 return collectives.psum_df32(part, axis).to_float(out_dtype)
             return collectives.psum_compensated(part, axis).astype(out_dtype)
@@ -319,8 +359,8 @@ def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
                                     check_vma=False))
 
 
-def _bmm_sharded(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
-                 mesh) -> jax.Array:
+def _bmm_sharded(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, mesh,
+                 rhs_presplit: Optional[splitting.Split] = None) -> jax.Array:
     """Mesh-native emulated batched matmul: contraction axis sharded over
     ``cfg.mesh_axis``, cross-device accumulation inside the scheme.
 
@@ -333,8 +373,22 @@ def _bmm_sharded(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
     merged with a TwoSum-compensated reduction — one all-gather for the
     whole GEMM, error-free in the two-float representation, with the single
     final rounding after the merge.
+
+    With ``rhs_presplit`` the cached B digits enter the shard_map sharded
+    along their contraction axis; bit-identity with the unsharded presplit
+    path is preserved for the int32 strategy (the cached full-matrix grid
+    IS the pmax-agreed grid).  Under the df32 strategy the cached B grid
+    is the globally-agreed one (computed from the full matrix) rather
+    than each shard's local grid — a valid splitting either way; the
+    compensated merge semantics are unchanged.
     """
-    return _sharded_fn(cfg, mesh, a.ndim - 2, a.shape[-1], a.dtype)(a, b)
+    nb = a.ndim - 2
+    if rhs_presplit is None:
+        return _sharded_fn(cfg, mesh, nb, a.shape[-1], a.dtype)(a, b)
+    sp = rhs_presplit
+    meta = (int(sp.beta), sp.base is not None, sp.gbase is not None)
+    fn = _sharded_fn(cfg, mesh, nb, a.shape[-1], a.dtype, meta)
+    return fn(a, (sp.digits, sp.scale, sp.base, sp.gbase))
 
 
 def _mesh_for(cfg: OzimmuConfig, n: int):
@@ -353,7 +407,41 @@ def _mesh_for(cfg: OzimmuConfig, n: int):
     return mesh
 
 
-def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
+def _check_presplit(a: jax.Array, b_shape, cfg: OzimmuConfig,
+                    sp: splitting.Split) -> None:
+    """Static consistency checks between a frozen B split and the call."""
+    n = a.shape[-1]
+    beta = splitting.compute_beta(n)
+    if sp.axis != 1:
+        raise ValueError(f"rhs_presplit must carry column scales (axis=1), "
+                         f"got axis={sp.axis}")
+    if sp.beta != beta:
+        raise ValueError(f"rhs_presplit beta={sp.beta} disagrees with the "
+                         f"contraction's beta={beta} (n={n}); the split was "
+                         f"frozen for a different contraction length")
+    if tuple(sp.digits.shape[1:]) != tuple(b_shape):
+        raise ValueError(f"rhs_presplit digits {sp.digits.shape} do not "
+                         f"match the canonical rhs {tuple(b_shape)}")
+    if sp.digits.shape[0] != cfg.k:
+        raise ValueError(f"rhs_presplit has k={sp.digits.shape[0]} slices, "
+                         f"config wants k={cfg.k}; re-freeze under the "
+                         f"current spec")
+    if cfg.accumulate == "oz2" and sp.gbase is None:
+        raise ValueError("oz2 accumulation needs a constant-scaling "
+                         "presplit (gbase); the cached split was frozen "
+                         "under a per-row strategy")
+    if cfg.accumulate == "group_ef" and sp.base is None:
+        raise ValueError("group-EF accumulation needs geometric slice "
+                         "scales; the cached split was frozen under the "
+                         "adaptive RN strategy")
+    if sp.scale.dtype != a.dtype:
+        raise ValueError(f"rhs_presplit scales are {sp.scale.dtype}, the "
+                         f"contraction computes in {a.dtype}; freeze the "
+                         f"weight in the engine's compute dtype")
+
+
+def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
+              rhs_presplit: Optional[splitting.Split] = None) -> jax.Array:
     """Emulated batched matmul on canonical operands:
     (*batch, m, n) @ (*batch, n, p) -> (*batch, m, p)."""
     if a.ndim < 2 or b.ndim < 2 or a.shape[-1] != b.shape[-2] or \
@@ -365,16 +453,27 @@ def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig) -> jax.Array:
         # of emitting one truncation warning per accumulation step
         cfg = cfg.with_(accum_dtype="f32")
     if cfg.auto_k:
-        # accuracy-driven slice count (core/plan.py): probes concrete
-        # operands eagerly; inside a jit trace it resolves to the static
-        # mantissa-coverage plan.  Resolved BEFORE the mesh dispatch so
-        # the jitted sharded entry is cached on the concrete k.
-        from repro.core import plan as _plan
-        cfg = cfg.with_(k=_plan.auto_k(a, b, cfg), auto_k=False)
+        if rhs_presplit is not None:
+            # the cache resolved auto-k at freeze time with the static
+            # mantissa-coverage plan (split_cache.resolved_k) — the same
+            # plan a jitted call resolves to; adopt the frozen k so the
+            # two paths agree bitwise.
+            cfg = cfg.with_(k=int(rhs_presplit.digits.shape[0]),
+                            auto_k=False)
+        else:
+            # accuracy-driven slice count (core/plan.py): probes concrete
+            # operands eagerly; inside a jit trace it resolves to the
+            # static mantissa-coverage plan.  Resolved BEFORE the mesh
+            # dispatch so the jitted sharded entry is cached on the
+            # concrete k.
+            from repro.core import plan as _plan
+            cfg = cfg.with_(k=_plan.auto_k(a, b, cfg), auto_k=False)
+    if rhs_presplit is not None:
+        _check_presplit(a, b.shape, cfg, rhs_presplit)
     mesh = _mesh_for(cfg, a.shape[-1])
     if mesh is not None:
-        return _bmm_sharded(a, b, cfg, mesh)
-    return _bmm_local(a, b, cfg.local())
+        return _bmm_sharded(a, b, cfg, mesh, rhs_presplit)
+    return _bmm_local(a, b, cfg.local(), rhs_presplit=rhs_presplit)
 
 
 # ---------------------------------------------------------------------------
@@ -408,8 +507,26 @@ def _argsort(seq):
     return sorted(range(len(seq)), key=seq.__getitem__)
 
 
+def canonical_rhs(b: jax.Array, dnums: DimensionNumbers):
+    """The rhs of ``dot_general(a, b, dnums)`` in the canonical batched
+    layout ``(*batch, n, p)`` the emulation contracts, plus the total
+    contraction length n.  This is the exact transpose/reshape
+    ``_dot_general_impl`` performs — the layout a frozen B-side Split
+    (``repro.core.split_cache``) must be computed against."""
+    (_, bc), (_, bb) = dnums
+    b_free = _remaining(b.ndim, bc, bb)
+    batch_shape = tuple(b.shape[i] for i in bb)
+    n = math.prod(b.shape[i] for i in bc)
+    p = math.prod(b.shape[i] for i in b_free)
+    b3 = jnp.transpose(b, list(bb) + list(bc) + b_free).reshape(
+        batch_shape + (n, p))
+    return b3, n
+
+
 def _dot_general_impl(a: jax.Array, b: jax.Array,
-                      dnums: DimensionNumbers, cfg: OzimmuConfig) -> jax.Array:
+                      dnums: DimensionNumbers, cfg: OzimmuConfig,
+                      rhs_presplit: Optional[splitting.Split] = None
+                      ) -> jax.Array:
     """Normalize to the canonical batched form and run the emulation.
 
     Layout convention matches ``jax.lax.dot_general``: output is
@@ -418,6 +535,10 @@ def _dot_general_impl(a: jax.Array, b: jax.Array,
     r are computed from the TOTAL contraction length, so the INT32
     no-overflow guarantees still hold); free axes flatten into m / p and are
     restored afterwards — batch axes are never flattened away.
+
+    With ``rhs_presplit`` the canonical ``b3`` is only used for static
+    shape checks and the emulation consumes the frozen digits instead (the
+    transpose/reshape of ``b`` is dead code XLA eliminates).
     """
     (ac, bc), (ab, bb) = dnums
     if len(ac) != len(bc) or len(ab) != len(bb):
@@ -431,19 +552,16 @@ def _dot_general_impl(a: jax.Array, b: jax.Array,
             raise ValueError(
                 f"batch size mismatch {a.shape} @ {b.shape}: {dnums}")
     a_free = _remaining(a.ndim, ac, ab)
-    b_free = _remaining(b.ndim, bc, bb)
     batch_shape = tuple(a.shape[i] for i in ab)
     m_shape = tuple(a.shape[i] for i in a_free)
-    p_shape = tuple(b.shape[i] for i in b_free)
-    n = math.prod(a.shape[i] for i in ac)
+    p_shape = tuple(b.shape[i] for i in _remaining(b.ndim, bc, bb))
     m = math.prod(m_shape)
-    p = math.prod(p_shape)
+    n = math.prod(a.shape[i] for i in ac)
     # (*batch, m, n) with contraction axes in pairing order (ac[i] <-> bc[i])
     a3 = jnp.transpose(a, list(ab) + a_free + list(ac)).reshape(
         batch_shape + (m, n))
-    b3 = jnp.transpose(b, list(bb) + list(bc) + b_free).reshape(
-        batch_shape + (n, p))
-    out = _bmm_impl(a3, b3, cfg)
+    b3, _ = canonical_rhs(b, dnums)
+    out = _bmm_impl(a3, b3, cfg, rhs_presplit=rhs_presplit)
     return out.reshape(batch_shape + m_shape + p_shape)
 
 
@@ -495,8 +613,55 @@ def _bwd(dnums, cfg, res, g):
 _oz_dot_general.defvjp(_fwd, _bwd)
 
 
+# --- presplit variant: B's frozen Split rides along as a (nondifferentiable)
+# pytree of arrays.  The cotangent contractions re-slice transposed operands
+# under different dimension numbers, so the frozen B split never applies to
+# the backward pass — both cotangents run the regular emulation, identical
+# to `_bwd` above.
+
+def _rebuild_split(arrays, beta: int) -> splitting.Split:
+    digits, scale, base, gbase = arrays
+    return splitting.Split(digits, scale, base, beta, 1, gbase=gbase)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _oz_dot_general_presplit(a, b, presplit_arrays, dnums, cfg, beta):
+    return _dot_general_impl(a, b, dnums, cfg,
+                             rhs_presplit=_rebuild_split(presplit_arrays,
+                                                         beta))
+
+
+def _presplit_fwd(a, b, presplit_arrays, dnums, cfg, beta):
+    out = _dot_general_impl(a, b, dnums, cfg,
+                            rhs_presplit=_rebuild_split(presplit_arrays,
+                                                        beta))
+    return out, (a, b, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), presplit_arrays))
+
+
+def _zero_cotangent(aval):
+    import numpy as np
+    if jnp.issubdtype(aval.dtype, jnp.floating):
+        return jnp.zeros(aval.shape, aval.dtype)
+    return np.zeros(aval.shape, jax.dtypes.float0)  # int digits
+
+
+def _presplit_bwd(dnums, cfg, beta, res, g):
+    a, b, presplit_avals = res
+    (ac, bc), (ab, bb) = dnums
+    da = _transpose_operand(g, b, a.ndim, dnums, cfg, swap_ans=False)
+    db = _transpose_operand(g, a, b.ndim, ((bc, ac), (bb, ab)), cfg,
+                            swap_ans=True)
+    return da, db, jax.tree.map(_zero_cotangent, presplit_avals)
+
+
+_oz_dot_general_presplit.defvjp(_presplit_fwd, _presplit_bwd)
+
+
 def ozimmu_dot_general(a: jax.Array, b: jax.Array, dimension_numbers,
-                       cfg: OzimmuConfig = VARIANTS["ozimmu_h"]) -> jax.Array:
+                       cfg: OzimmuConfig = VARIANTS["ozimmu_h"],
+                       rhs_presplit: Optional[splitting.Split] = None
+                       ) -> jax.Array:
     """Emulated ``jax.lax.dot_general`` via k-slice INT8 GEMMs.
 
     ``dimension_numbers`` is the standard lax contract,
@@ -507,12 +672,36 @@ def ozimmu_dot_general(a: jax.Array, b: jax.Array, dimension_numbers,
     evaluates both cotangents with the same emulation under the transposed
     dimension numbers.
 
+    ``rhs_presplit`` (serving fast path): a frozen column-scale
+    :class:`~repro.core.splitting.Split` of the canonical rhs — from
+    :class:`repro.core.split_cache.SplitCache` — makes the call skip the
+    B-side splitter entirely, bit-identical to the uncached path (the
+    splitter is deterministic; freezing merely hoists it).  The split
+    must have been frozen for these exact dimension numbers, contraction
+    length, spec, and compute dtype (checked statically).  Gradients
+    still flow to both operands through the regular emulated cotangent
+    contractions (the frozen split only accelerates the forward).
+
     Example — batched attention-score-like contraction::
 
         out = ozimmu_dot_general(q, k, (((2,), (2,)), ((0,), (0,))), cfg)
         # q (B, Lq, D), k (B, Lk, D)  ->  out (B, Lq, Lk)
     """
-    return _oz_dot_general(a, b, _canonicalize_dnums(dimension_numbers), cfg)
+    dnums = _canonicalize_dnums(dimension_numbers)
+    if rhs_presplit is None:
+        return _oz_dot_general(a, b, dnums, cfg)
+    sp = rhs_presplit
+    # beta is a static property of the TOTAL contraction length (eq. 4) —
+    # recomputed here rather than read off the Split because a Split
+    # passed through a jit boundary carries its int fields as tracers.
+    # SplitCache freezes with exactly this beta; a concrete mismatch is
+    # rejected, a traced one is unobservable (same construction).
+    beta = splitting.compute_beta(math.prod(b.shape[i] for i in dnums[0][1]))
+    if isinstance(sp.beta, int) and sp.beta != beta:
+        raise ValueError(f"rhs_presplit beta={sp.beta} disagrees with the "
+                         f"contraction's beta={beta}")
+    return _oz_dot_general_presplit(
+        a, b, (sp.digits, sp.scale, sp.base, sp.gbase), dnums, cfg, beta)
 
 
 def ozimmu_matmul(a: jax.Array, b: jax.Array,

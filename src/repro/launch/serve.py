@@ -1,18 +1,22 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Serving driver over the continuous-batching runtime.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \
-        --smoke --batch 4 --prompt-len 32 --gen 32
+        --requests 8 --slots 4 --prompt-len 32 --gen 32 \
+        --engine ozimmu_h-8:df32 --page-block 16
 
-Serving model: a slot-based continuous batcher.  Each of ``batch`` slots
-holds one request; when a request finishes (EOS or budget), the slot is
-refilled from the queue without stopping the decode loop — the standard
-production pattern (vLLM-style), expressed with fixed shapes so a single
-compiled ``decode_step`` serves throughout.  Prefill runs per-request via
-teacher-forced decode of the prompt into the slot's cache region.
+The heavy lifting lives in :mod:`repro.serving` (docs/serving.md): a
+slot-based continuous batcher with bucketed batched prefill (mixed-length
+prompts share one compiled call), an optional block-paged KV pool
+(``--page-block``), and — for ozimmu engines — the persistent weight
+split-cache: every projection weight is frozen into its int8 digit
+slices once at startup, so decode steps skip the B-side splitter
+entirely (bit-identical; the dominant per-step splitting cost at
+decode).  ``--no-presplit`` disables the cache for A/B comparison.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import List, Optional
 
@@ -23,58 +27,47 @@ import numpy as np
 from repro import configs
 from repro.distributed import compat
 from repro.distributed.sharding import use_rules
-from repro.launch import steps as S
 from repro.launch.mesh import mesh_rules, parse_mesh_spec
 from repro.models import api
+from repro.serving import ServingRuntime
 
 
-class Server:
-    def __init__(self, cfg, params, max_len: int = 512, batch: int = 4):
-        self.cfg, self.params = cfg, params
-        self.model = api.get_model(cfg)
-        self.max_len, self.batch = max_len, batch
-        self._decode = jax.jit(
-            lambda c, t, n: self.model.decode_step(params, cfg, c, t, n))
+def make_runtime(cfg, params, *, slots: int, max_len: int,
+                 page_block: Optional[int] = None,
+                 presplit: Optional[bool] = None, ctx=None) -> ServingRuntime:
+    return ServingRuntime(cfg, params, slots=slots, max_len=max_len,
+                          page_block=page_block, presplit=presplit, ctx=ctx)
 
-    def generate(self, prompts: List[np.ndarray], gen_tokens: int = 32,
-                 ctx=None):
-        """Greedy-decode a batch of token prompts (list of 1-D int arrays)."""
-        B = len(prompts)
-        assert B <= self.batch
-        # pad batch to fixed slot count
-        prompts = prompts + [prompts[-1]] * (self.batch - B)
-        max_prompt = max(len(p) for p in prompts)
-        cache = self.model.init_cache(self.cfg, self.batch, self.max_len,
-                                      params=self.params, ctx=ctx)
-        # prefill: teacher-force prompt tokens (per-position decode keeps a
-        # single compiled step; a chunked prefill is the next optimization)
-        toks = np.zeros((self.batch, max_prompt), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p  # left-aligned
-        logits = None
-        for t in range(max_prompt):
-            logits, cache = self._decode(
-                cache, jnp.asarray(toks[:, t:t + 1]),
-                jnp.asarray(t + 1, jnp.int32))
-        out = [list(p) for p in prompts]
-        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for g in range(gen_tokens):
-            for i in range(self.batch):
-                out[i].append(int(cur[i]))
-            logits, cache = self._decode(
-                cache, cur[:, None], jnp.asarray(max_prompt + g + 1,
-                                                 jnp.int32))
-            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return [np.asarray(o) for o in out[:B]]
+
+def slot_context(cfg, params, prompt_len: int):
+    """Static single-slot context for the vlm/encdec families (shared
+    across slots, matching the pre-runtime driver)."""
+    if cfg.family == "vlm":
+        return jnp.zeros((1, cfg.vision_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jnp.zeros((1, prompt_len, cfg.d_model), jnp.float32)
+        return encdec.encode(params, cfg, frames)
+    return None
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2_1_8b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="decode slots (compiled batch dimension)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests to serve (default: slots, i.e. one "
+                         "full wave)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-block", type=int, default=None,
+                    help="positions per KV block: enables the paged "
+                         "KV-cache pool (attention-cache families)")
+    ap.add_argument("--no-presplit", action="store_true",
+                    help="disable the weight split-cache (A/B baseline; "
+                         "ozimmu engines only)")
     ap.add_argument("--engine", "--matmul_engine", dest="engine",
                     default="bf16",
                     help="matmul engine spec, e.g. bf16, ozimmu_h-8:df32@model "
@@ -84,10 +77,10 @@ def main(argv=None):
                     help="mesh spec: 'data=2,model=4', 'single_pod', "
                          "'multi_pod'; default no mesh (single device)")
     args = ap.parse_args(argv)
+    n_requests = args.requests if args.requests is not None else args.slots
 
     mesh = parse_mesh_spec(args.mesh)
     rules = mesh_rules(mesh, args.arch) if mesh is not None else None
-    import contextlib
     mesh_ctx = (compat.set_mesh(mesh) if mesh is not None
                 else contextlib.nullcontext())
     cfg = configs.get_config(args.arch, smoke=True, engine_spec=args.engine)
@@ -99,26 +92,40 @@ def main(argv=None):
     with mesh_ctx, use_rules(rules):
         model = api.get_model(cfg)
         params, _ = model.init(jax.random.PRNGKey(0), cfg)
-        ctx = None
-        if cfg.family == "vlm":
-            ctx = jnp.zeros((args.batch, cfg.vision_seq, cfg.d_model),
-                            jnp.float32)
-        if cfg.family == "encdec":
-            from repro.models import encdec
-            frames = jnp.zeros((args.batch, args.prompt_len, cfg.d_model),
-                               jnp.float32)
-            ctx = encdec.encode(params, cfg, frames)
-        server = Server(cfg, params, max_len=args.max_len, batch=args.batch)
+        ctx = slot_context(cfg, params, args.prompt_len)
+        runtime = make_runtime(
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            page_block=args.page_block,
+            presplit=False if args.no_presplit else None, ctx=ctx)
+        if runtime.split_cache is not None:
+            st = runtime.split_cache.stats
+            print(f"[serve] split-cache: froze {st.misses} weight splits "
+                  f"({st.cached_bytes / 1e6:.2f} MB resident)")
         rng = np.random.default_rng(0)
         prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len,
-                                dtype=np.int32) for _ in range(args.batch)]
+                                dtype=np.int32) for _ in range(n_requests)]
         t0 = time.time()
-        outs = server.generate(prompts, gen_tokens=args.gen, ctx=ctx)
+        outs = runtime.generate(prompts, max_new=args.gen)
         dt = time.time() - t0
-    total_new = args.gen * args.batch
-    print(f"[serve] {args.arch}: {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s, batch={args.batch})")
-    print("[serve] sample continuation:", outs[0][-args.gen:][:16])
+    s = runtime.metrics.summary()
+    print(f"[serve] {args.arch}: {s['tokens_generated']} tokens from "
+          f"{s['requests']['finished']} requests in {dt:.2f}s "
+          f"({s['tokens_per_s']:.1f} tok/s, slots={args.slots}, "
+          f"prefill_calls={s['prefill_calls']}, "
+          f"evictions={s['evictions']})")
+    if s["ttft_s"]["mean"] is not None:
+        print(f"[serve] TTFT mean {s['ttft_s']['mean']:.3f}s "
+              f"p95 {s['ttft_s']['p95']:.3f}s; queue depth max "
+              f"{s['queue_depth']['max']}")
+    if s["split_cache"] is not None:
+        sc = s["split_cache"]
+        print(f"[serve] split-cache: weight-split hit rate "
+              f"{sc['weight_split_hit_rate']:.2f}, "
+              f"{sc['avoided_split_bytes'] / 1e6:.2f} MB of decode-time "
+              f"re-splitting avoided")
+    print("[serve] sample continuation:",
+          outs[0][-args.gen:][:16].tolist())
+    return s
 
 
 if __name__ == "__main__":

@@ -259,6 +259,46 @@ def _flash_bwd_rule(engine, causal, window, q_chunk, kv_chunk, q_offset,
 _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
+def decode_positions(cur_len, batch: int) -> jax.Array:
+    """(B, 1) absolute position ``cur_len - 1`` of the token being decoded.
+
+    ``cur_len`` is ``()`` (all slots in lock-step — the pre-serving
+    contract) or ``(B,)`` (continuous batching: every slot at its own
+    sequence position)."""
+    c = (jnp.asarray(cur_len) - 1).astype(jnp.int32)
+    if c.ndim == 0:
+        return jnp.broadcast_to(c, (batch, 1))
+    return c[:, None]
+
+
+def cache_update_row(buf: jax.Array, new: jax.Array, cur_len) -> jax.Array:
+    """Write the decode-step row at position ``(cur_len - 1) mod L`` of a
+    per-slot cache buffer.
+
+    ``buf`` (B, L, ...); ``new`` (B, 1, ...); ``cur_len`` ``()`` or
+    ``(B,)``.  The scalar form keeps the original
+    ``dynamic_update_slice`` (one shared index); the vector form scatters
+    one row per slot — an identical single-row replace, so the two forms
+    are bitwise-equal when every slot shares a position.
+
+    Vector slots with ``cur_len == 0`` are NO-OPS (the old row value is
+    written back).  The serving runtime uses 0 for slots that are idle or
+    not yet started inside a right-aligned prefill scan; without the
+    guard their garbage k/v would land in row L-1 — harmless for per-row
+    split scales (the row stays masked) but fatal under the oz2 GLOBAL
+    digit grid, where one garbage row can shift every entry's scale."""
+    cache_len = buf.shape[1]
+    c = jnp.asarray(cur_len)
+    idx = (c - 1) % cache_len
+    new = new.astype(buf.dtype)
+    if c.ndim == 0:
+        return lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)
+    b_idx = jnp.arange(buf.shape[0])
+    old = buf[b_idx, idx]
+    live = (c > 0).reshape((-1,) + (1,) * (new.ndim - 2))
+    return buf.at[b_idx, idx].set(jnp.where(live, new[:, 0], old))
+
+
 def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cur_len: jax.Array, *, window: Optional[int] = None,
                      engine=None) -> jax.Array:

@@ -120,10 +120,11 @@ def attn_block(p, cfg: ModelConfig, x, cos, sin, *, cache=None, cur_len=None,
         # is within the window, so no extra window mask is needed.
         kc, vc = cache
         cache_len = kc.shape[1]
-        idx = (cur_len - 1) % cache_len
+        # cur_len is () or (B,) (per-slot continuous batching); the row
+        # write and the validity mask are per slot either way
         valid_len = jnp.minimum(cur_len, cache_len)
-        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, axis=1)
-        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, axis=1)
+        kc = L.cache_update_row(kc, k, cur_len)
+        vc = L.cache_update_row(vc, v, cur_len)
         new_cache = (kc, vc)
         out = L.attention_decode(q, kc, vc, valid_len, window=None,
                                  engine=eng)
@@ -233,10 +234,12 @@ def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
 
     Returns (logits (B, 1, vocab), new_cache).  For windowed attention the
     cache is a rolling buffer of size window (index modulo window).
+    ``cur_len`` is a scalar (all slots in lock-step) or a (B,) vector
+    (continuous batching: each slot decodes at its own position).
     """
     B = tokens.shape[0]
     x = L.embed_tokens(tokens, params["embed"], cfg.compute_dtype)
-    pos = jnp.broadcast_to((cur_len - 1).astype(jnp.int32), (B, 1))
+    pos = L.decode_positions(cur_len, B)
     cos, sin = L.rope_cos_sin(pos, cfg.hd, cfg.rope_theta)
 
     def body(x, inputs):

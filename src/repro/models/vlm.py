@@ -208,7 +208,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
                 cur_len: jax.Array):
     B = tokens.shape[0]
     x = L.embed_tokens(tokens, params["embed"], cfg.compute_dtype)
-    pos = jnp.broadcast_to((cur_len - 1).astype(jnp.int32), (B, 1))
+    pos = L.decode_positions(cur_len, B)
     cos, sin = L.rope_cos_sin(pos, cfg.hd, cfg.rope_theta)
 
     def body(x, inputs):

@@ -1,0 +1,22 @@
+"""Serving runtime: continuous batching + persistent weight split-cache.
+
+The inference-side system layer over the emulated-GEMM engine
+(docs/serving.md):
+
+* :mod:`repro.serving.scheduler`  — host-side FIFO continuous batching
+  (slot admission / eviction, bucketed prefill grouping).
+* :mod:`repro.serving.kvcache`    — block-paged KV-cache pool plus the
+  family-generic per-slot cache operations.
+* :mod:`repro.serving.presplit`   — freezes static weight matrices into
+  their spec-resolved int8 splits (``repro.core.split_cache``) so decode
+  steps skip the B-side splitter entirely.
+* :mod:`repro.serving.metrics`    — tokens/s, TTFT, queue depth,
+  split-cache savings.
+* :mod:`repro.serving.runtime`    — :class:`ServingRuntime`, the engine
+  room tying them together around jitted prefill/decode steps.
+"""
+from repro.serving.metrics import ServingMetrics
+from repro.serving.runtime import ServingRuntime
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["ServingRuntime", "ServingMetrics", "Request", "Scheduler"]

@@ -1,0 +1,323 @@
+"""Per-slot cache operations + block-paged KV-cache pool.
+
+Two layers:
+
+:class:`SlotCacheOps` — family-generic *monolithic* slot operations,
+driven by each model's ``cache_axes`` (the ``"cache_batch"`` logical
+axis marks the slot dimension of every cache leaf, wherever it sits —
+axis 1 for the dense/MoE/encdec stacks, axis 2 for the vlm group nesting
+and the hybrid conv/lru states).  Used by the runtime to freeze
+non-participating slots around a prefill call (functional
+snapshot-select, no model changes) and to reset a slot at admission.
+
+:class:`PagedKV` — a block-paged pool replacing the monolithic
+``(layers, slots, max_len, ...)`` buffers for the attention-cache
+families whose every leaf shares the layout ``(*lead, slot, seq, *tail)``
+with one sequence length (dense, moe, mla_moe, encdec).  The pool stores
+``n_blocks`` blocks of ``block`` positions per leaf; each slot owns a
+block table (host-side) with blocks allocated on demand as its sequence
+grows.  Memory no longer scales as ``slots x max_len`` but as the sum of
+*live* sequence lengths (rounded up to blocks); a finishing request
+frees its blocks immediately, and pool pressure triggers scheduler
+eviction instead of OOM.
+
+The decode step still consumes a contiguous ``(…, slot, seq, …)`` view:
+``gather`` materializes it from the pool (a copy — the correctness-first
+realization; a paged-attention kernel reading the pool in place is the
+obvious next optimization and slots behind the same interface), the
+model runs unchanged, and ``scatter_rows`` writes back exactly the one
+row per active slot the decode step appended.  Unallocated table entries
+point at block 0; reads through them see unrelated bytes, which is safe
+because attention masks every position >= the slot's current length, and
+writes never go through them (decode writes only at allocated positions;
+inactive slots are redirected to a dedicated trash block).
+Per-token paged-vs-monolithic equivalence is asserted in
+tests/test_serving.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SlotCacheOps", "PagedKV"]
+
+
+def _axes_tree(model, cfg):
+    if getattr(model, "cache_axes", None) is None:
+        return None
+    return model.cache_axes(cfg)
+
+
+def _pathkey(path) -> Tuple[str, ...]:
+    return tuple(str(k) for k in path)
+
+
+def _leaf_axes(axes_tree, cache) -> Dict[Tuple, Tuple]:
+    """{stringified leaf path: logical axes tuple} for the cache tree."""
+    is_ax = lambda x: isinstance(x, tuple)
+    flat_cache = jax.tree_util.tree_flatten_with_path(cache)[0]
+    if axes_tree is None:
+        return {_pathkey(path): None for path, _ in flat_cache}
+    flat_axes = jax.tree_util.tree_flatten_with_path(
+        axes_tree, is_leaf=is_ax)[0]
+    ax = {_pathkey(path): v for path, v in flat_axes}
+    return {_pathkey(path): ax.get(_pathkey(path))
+            for path, _ in flat_cache}
+
+
+def _slot_axis(axes: Optional[Tuple]) -> int:
+    if axes is None:
+        return 1          # every family's default cache layout
+    return axes.index("cache_batch")
+
+
+class SlotCacheOps:
+    """Family-generic per-slot select / reset on a monolithic cache."""
+
+    def __init__(self, cfg, model):
+        self.cfg, self.model = cfg, model
+        self._axes = _axes_tree(model, cfg)
+        self._select = jax.jit(self._select_impl)
+
+    def _slot_axes_for(self, cache) -> List[int]:
+        la = _leaf_axes(self._axes, cache)
+        return [_slot_axis(v) for v in la.values()]
+
+    def _select_impl(self, new_cache, old_cache, mask):
+        """Per-slot select: leaves of ``new_cache`` where ``mask`` is set
+        (along each leaf's slot axis), ``old_cache`` elsewhere — the
+        functional freeze of non-participating slots."""
+        axes = self._slot_axes_for(new_cache)
+        flat_new, tree = jax.tree_util.tree_flatten(new_cache)
+        flat_old = jax.tree_util.tree_flatten(old_cache)[0]
+        out = []
+        for new, old, ax in zip(flat_new, flat_old, axes):
+            shape = [1] * new.ndim
+            shape[ax] = mask.shape[0]
+            out.append(jnp.where(mask.reshape(shape), new, old))
+        return jax.tree_util.tree_unflatten(tree, out)
+
+    def select_slots(self, new_cache, old_cache, mask: jax.Array):
+        return self._select(new_cache, old_cache, mask)
+
+    def reset_slot(self, cache, slot_idx: int, template):
+        """Write a freshly initialized single-slot cache (``template``,
+        from ``init_cache(cfg, 1, ...)``) into slot ``slot_idx``."""
+        axes = self._slot_axes_for(cache)
+        flat_c, tree = jax.tree_util.tree_flatten(cache)
+        flat_t = jax.tree_util.tree_flatten(template)[0]
+        out = []
+        idx = jnp.asarray(slot_idx, jnp.int32)  # x64: keep s32 indices
+        for leaf, one, ax in zip(flat_c, flat_t, axes):
+            one = jax.lax.index_in_dim(one, 0, ax, keepdims=False)
+            out.append(jax.lax.dynamic_update_index_in_dim(
+                leaf, one.astype(leaf.dtype), idx, axis=ax))
+        return jax.tree_util.tree_unflatten(tree, out)
+
+
+class PagedKV:
+    """Block-paged pool + host-side block tables (see module docstring).
+
+    Supported cache layouts: every leaf ``(*lead, slot, seq, *tail)``
+    with the same ``seq`` length (``supported()`` checks).  The last pool
+    block (id ``n_blocks``) is the write trash for inactive slots and is
+    never allocated.
+    """
+
+    def __init__(self, cfg, model, n_slots: int, max_len: int,
+                 block: int = 16, n_blocks: Optional[int] = None):
+        self.cfg, self.model = cfg, model
+        self.n_slots = n_slots
+        # shapes only — materializing the monolithic cache here would
+        # transiently double KV memory, the very regime paging avoids
+        cache = jax.eval_shape(
+            lambda: model.init_cache(cfg, n_slots, max_len))
+        axes = _leaf_axes(_axes_tree(model, cfg), cache)
+        self._slot_ax = {p: _slot_axis(v) for p, v in axes.items()}
+        seqs = {leaf.shape[self._slot_ax[p] + 1]
+                for (p, leaf) in jax.tree_util.tree_flatten_with_path(
+                    cache)[0]
+                for p in [tuple(str(k) for k in p)]}
+        if len(seqs) != 1:
+            raise ValueError(f"paged KV needs one shared sequence length "
+                             f"across cache leaves, got {sorted(seqs)}")
+        self.seq_len = seqs.pop()
+        if self.seq_len % block != 0:
+            raise ValueError(f"block={block} must divide the cache length "
+                             f"{self.seq_len}")
+        self.block = block
+        self.blocks_per_slot = self.seq_len // block
+        if n_blocks is None:
+            n_blocks = n_slots * self.blocks_per_slot
+        self.n_blocks = n_blocks
+        # host-side tables: unallocated entries point at block 0 (read-
+        # only garbage, masked by attention); trash block id = n_blocks.
+        self.tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        self.allocated = np.zeros((n_slots,), np.int32)    # blocks per slot
+        self.free_blocks: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._flat_paths = [tuple(str(k) for k in p) for p, _ in
+                            jax.tree_util.tree_flatten_with_path(cache)[0]]
+        self._tree = jax.tree_util.tree_structure(cache)
+        self.pool = self._pool_from(cache)
+        self._gather = jax.jit(self._gather_impl)
+        self._scatter_rows = jax.jit(self._scatter_rows_impl)
+        self._span_fns = {}
+
+    # -- support probe ---------------------------------------------------
+
+    @staticmethod
+    def supported(cfg, model, max_len: int) -> bool:
+        if cfg.family not in ("dense", "moe", "mla_moe"):
+            # vlm nests slots under a group axis with a second sequence
+            # length (vision cross-KV); encdec/vlm cross caches are
+            # admission-time context writes spanning the whole sequence,
+            # which would force full allocation and defeat paging; the
+            # ssm/hybrid states are constant-size (nothing to page).
+            return False
+        cache = jax.eval_shape(lambda: model.init_cache(cfg, 1, max_len))
+        axes = _leaf_axes(_axes_tree(model, cfg), cache)
+        seqs = set()
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            p = tuple(str(k) for k in path)
+            ax = _slot_axis(axes[p])
+            if leaf.ndim < ax + 2:
+                return False
+            seqs.add(leaf.shape[ax + 1])
+        return len(seqs) == 1
+
+    # -- device ops ------------------------------------------------------
+
+    def _pool_leaves(self, cache_like):
+        flat = jax.tree_util.tree_flatten(cache_like)[0]
+        return list(zip(self._flat_paths, flat))
+
+    def _pool_from(self, cache):
+        """Zeroed pool with one block-paged buffer per cache leaf (shapes
+        taken from the monolithic layout's ShapeDtypeStructs); nothing is
+        allocated initially — slot contents are written at prefill."""
+        out = []
+        for path, leaf in self._pool_leaves(cache):
+            ax = self._slot_ax[path]
+            lead, tail = leaf.shape[:ax], leaf.shape[ax + 2:]
+            pool = jnp.zeros(lead + (self.n_blocks + 1, self.block) + tail,
+                             leaf.dtype)
+            out.append(pool)
+        return jax.tree_util.tree_unflatten(self._tree, out)
+
+    def _gather_impl(self, pool, tables):
+        """(pool, (S, bps) tables) -> contiguous (*lead, S, seq, *tail)."""
+        out = []
+        for path, pleaf in self._pool_leaves(pool):
+            ax = self._slot_ax[path]
+            g = jnp.take(pleaf, tables, axis=ax)  # (*lead, S, bps, blk, *tail)
+            lead = pleaf.shape[:ax]
+            tail = pleaf.shape[ax + 2:]
+            out.append(g.reshape(lead + (self.n_slots, self.seq_len) + tail))
+        return jax.tree_util.tree_unflatten(self._tree, out)
+
+    def _scatter_rows_impl(self, pool, tables, cache, cur_len, active):
+        """Write back the one row per slot the decode step appended:
+        position ``(cur_len - 1) mod seq``, redirected to the trash block
+        for inactive slots."""
+        pos = (cur_len - 1) % self.seq_len
+        blk_idx = pos // self.block
+        off = pos % self.block
+        blk = jnp.take_along_axis(tables, blk_idx[:, None], axis=1)[:, 0]
+        blk = jnp.where(active, blk, self.n_blocks)     # trash for inactive
+        out = []
+        for (path, pleaf), (_, cleaf) in zip(self._pool_leaves(pool),
+                                             self._pool_leaves(cache)):
+            ax = self._slot_ax[path]
+            sl = (slice(None),) * ax
+            rows = cleaf[sl + (jnp.arange(self.n_slots), pos)]
+            out.append(pleaf.at[sl + (blk, off)].set(
+                rows.astype(pleaf.dtype)))
+        return jax.tree_util.tree_unflatten(self._tree, out)
+
+    def _scatter_span_fn(self, nb_used: int):
+        """jitted writer of a slot's first ``nb_used`` blocks (admission /
+        prefill write-back), memoized per span length on the instance
+        (a functools.lru_cache on the bound method would pin the pool)."""
+        cached = self._span_fns.get(nb_used)
+        if cached is not None:
+            return cached
+
+        def impl(pool, cache, slot_idx, block_ids):
+            out = []
+            for (path, pleaf), (_, cleaf) in zip(self._pool_leaves(pool),
+                                                 self._pool_leaves(cache)):
+                ax = self._slot_ax[path]
+                sl = (slice(None),) * ax
+                span = jax.lax.dynamic_index_in_dim(
+                    cleaf, slot_idx, axis=ax, keepdims=False)
+                lead = cleaf.shape[:ax]
+                tail = cleaf.shape[ax + 2:]
+                span = jax.lax.slice_in_dim(
+                    span, 0, nb_used * self.block, axis=ax)
+                span = span.reshape(lead + (nb_used, self.block) + tail)
+                out.append(pleaf.at[sl + (block_ids,)].set(
+                    span.astype(pleaf.dtype)))
+            return jax.tree_util.tree_unflatten(self._tree, out)
+        fn = self._span_fns[nb_used] = jax.jit(impl)
+        return fn
+
+    # -- host-side block management --------------------------------------
+
+    def ensure(self, slot: int, length: int) -> bool:
+        """Allocate blocks so positions [0, length) are writable; False
+        when the pool is exhausted (caller evicts and retries)."""
+        need = -(-length // self.block)
+        if need > self.blocks_per_slot:
+            raise ValueError(f"sequence length {length} exceeds the slot "
+                             f"capacity {self.seq_len}")
+        if need > self.n_blocks:
+            # evicting every other slot could never free enough — without
+            # this check the scheduler would requeue/readmit forever
+            raise ValueError(f"sequence length {length} needs {need} "
+                             f"blocks but the pool holds only "
+                             f"{self.n_blocks}; raise page_blocks")
+        while self.allocated[slot] < need:
+            if not self.free_blocks:
+                return False
+            b = self.free_blocks.pop()
+            self.tables[slot, self.allocated[slot]] = b
+            self.allocated[slot] += 1
+        return True
+
+    def free_slot(self, slot: int):
+        n = int(self.allocated[slot])
+        self.free_blocks.extend(int(b) for b in self.tables[slot, :n])
+        self.tables[slot, :] = 0
+        self.allocated[slot] = 0
+
+    @property
+    def free_block_count(self) -> int:
+        return len(self.free_blocks)
+
+    def device_tables(self) -> jax.Array:
+        return jnp.asarray(self.tables)
+
+    # -- high-level ops the runtime uses ---------------------------------
+
+    def gather(self, tables: jax.Array):
+        return self._gather(self.pool, tables)
+
+    def scatter_rows(self, tables, cache, cur_len, active):
+        self.pool = self._scatter_rows(self.pool, tables, cache,
+                                       cur_len, active)
+
+    def write_slot_prefix(self, slot: int, cache, length: int):
+        """Persist positions [0, length) of ``slot`` from a contiguous
+        cache view into the slot's allocated blocks (prefill / admission
+        write-back)."""
+        nb_used = -(-length // self.block)
+        if nb_used == 0:
+            return
+        assert nb_used <= int(self.allocated[slot]), (nb_used,
+                                                      self.allocated[slot])
+        fn = self._scatter_span_fn(nb_used)
+        self.pool = fn(self.pool, cache, jnp.asarray(slot, jnp.int32),
+                       jnp.asarray(self.tables[slot, :nb_used]))

@@ -1,0 +1,89 @@
+"""Serving metrics: tokens/s, TTFT, queue depth, split-cache savings.
+
+Counters are plain host-side Python updated by the runtime loop; the
+summary is one JSON-able dict so the bench harness and the serve driver
+report the same numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+__all__ = ["ServingMetrics"]
+
+
+def _pct(sorted_vals: List[float], q: float) -> Optional[float]:
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    now: Any = time.monotonic         # injectable clock (virtual-time tests)
+
+    started_at: Optional[float] = None
+    stopped_at: Optional[float] = None
+    requests_submitted: int = 0
+    requests_finished: int = 0
+    tokens_generated: int = 0
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    prefill_calls: int = 0
+    evictions: int = 0
+    ttft: List[float] = dataclasses.field(default_factory=list)
+    latency: List[float] = dataclasses.field(default_factory=list)
+    queue_depth_samples: List[int] = dataclasses.field(default_factory=list)
+    split_cache: Optional[Dict[str, Any]] = None
+
+    def start(self):
+        if self.started_at is None:
+            self.started_at = self.now()
+
+    def stop(self):
+        self.stopped_at = self.now()
+
+    @property
+    def elapsed(self) -> float:
+        if self.started_at is None:
+            return 0.0
+        end = self.stopped_at if self.stopped_at is not None else self.now()
+        return max(end - self.started_at, 1e-9)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / self.elapsed
+
+    def record_finish(self, req, end_time: float):
+        self.requests_finished += 1
+        if req.first_token_at is not None:
+            self.ttft.append(req.first_token_at - req.arrival)
+        self.latency.append(end_time - req.arrival)
+
+    def sample_queue(self, depth: int):
+        self.queue_depth_samples.append(int(depth))
+
+    def summary(self) -> Dict[str, Any]:
+        ttft = sorted(self.ttft)
+        lat = sorted(self.latency)
+        qd = self.queue_depth_samples
+        return {
+            "requests": {"submitted": self.requests_submitted,
+                         "finished": self.requests_finished},
+            "tokens_generated": self.tokens_generated,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "evictions": self.evictions,
+            "elapsed_s": round(self.elapsed, 4),
+            "tokens_per_s": round(self.tokens_per_s, 2),
+            "ttft_s": {"mean": (sum(ttft) / len(ttft)) if ttft else None,
+                       "p50": _pct(ttft, 0.5), "p95": _pct(ttft, 0.95)},
+            "latency_s": {"mean": (sum(lat) / len(lat)) if lat else None,
+                          "p95": _pct(lat, 0.95)},
+            "queue_depth": {"max": max(qd) if qd else 0,
+                            "mean": (sum(qd) / len(qd)) if qd else 0.0},
+            "split_cache": self.split_cache,
+        }

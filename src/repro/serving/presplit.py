@@ -1,0 +1,136 @@
+"""Freeze static model weights into their spec-resolved Ozaki splits.
+
+``wrap_params`` walks a parameter tree and replaces every weight leaf
+that the model layers consume through the plain projection contraction
+``x[..., n] @ w[n, p]`` with a :class:`repro.core.engine.PresplitWeight`
+— the original array bundled with its frozen int8 digit slices and
+scales from a :class:`repro.core.split_cache.SplitCache`.  The engine
+then skips the B-side splitter on every decode step (bit-identical; see
+``core/split_cache.py``), which removes the dominant per-step splitting
+cost: at decode the activations are a (B, 1, d) sliver while the weights
+are the full (d, p) matrices.
+
+Which leaves wrap is a *name-based* contract with the model layers: the
+keys below are exactly the projection weights each family contracts via
+``engine(x, w)`` (see the family modules).  Leaves with extra leading
+axes (the layer-stacked parameters a ``lax.scan`` slices, the vlm
+group/self nesting) are split per stack element in one batched call and
+stored with the stack axes leading, so the scan's per-layer slicing of
+the pytree yields exactly the per-layer wrapper.  Anything else — the
+embedding table (a gather), MoE routers (f32 ``jnp.dot`` by design),
+expert-batched MoE weights (a different dimension-numbers pattern) — is
+left untouched; the wrapper's engine-side dnums guard would make
+wrapping them a silent no-op anyway, this just avoids dead cache
+entries.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split_cache as sc
+from repro.core import splitting
+from repro.core.engine import MatmulEngine, PresplitWeight
+
+__all__ = ["WRAP_KEYS", "wrap_params", "wrappable_paths"]
+
+# projection weights consumed as engine(x, w) — contract w's axis 0
+WRAP_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                    # GQA attention
+    "w_gate", "w_up", "w_down",                # MLPs (dense + shared expert)
+    "w_dkv", "w_krope", "w_q", "w_uk", "w_uv", "w_o",   # MLA
+    "w_in", "w_x", "w_out",                    # SSM / recurrent blocks
+    "lm_head",
+})
+
+
+def _wrappable(path: Tuple[str, ...], leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+        return False
+    if path[-1] not in WRAP_KEYS:
+        return False
+    # expert-batched MoE weights live under .../moe/{w_gate,w_up,w_down}
+    # and contract expert-batched (a different dnums); the shared expert
+    # under .../moe/shared/... is a plain projection and does wrap.
+    if "moe" in path[:-1] and "shared" not in path[:-1]:
+        return False
+    return True
+
+
+def wrappable_paths(params) -> list:
+    """The parameter paths ``wrap_params`` would freeze (introspection)."""
+    found = []
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            for key in tree:
+                walk(tree[key], path + (key,))
+        elif isinstance(tree, (list, tuple)):
+            for i, sub in enumerate(tree):
+                walk(sub, path + (str(i),))
+        elif tree is not None and _wrappable(path, tree):
+            found.append(path)
+
+    walk(params, ())
+    return found
+
+
+def _stacked_rhs_dnums(ndim: int):
+    """dnums describing a stacked weight (*stack, n, p) as the rhs of a
+    stack-batched projection: contract axis ndim-2, batch the stack axes.
+    (The lhs half is a placeholder with matching arity — only the rhs
+    half determines the canonical split layout and the cache key.)"""
+    stack = tuple(range(ndim - 2))
+    return (((len(stack),), (ndim - 2,)), (stack, stack))
+
+
+def freeze_weight(w: jax.Array, engine: MatmulEngine,
+                  cache: sc.SplitCache) -> PresplitWeight:
+    """One leaf (*stack, n, p) -> PresplitWeight with stack-leading splits."""
+    cfg = engine.ozimmu_config
+    compute = jnp.float64 if cfg.accum_dtype == "f64" and \
+        jax.config.jax_enable_x64 else jnp.float32
+    nstack = w.ndim - 2
+    # the cache keys/anchors on `w` itself and casts internally (keying
+    # on a throwaway cast array would drop the entry at once); the
+    # stack_leading layout is stored directly so the cached entry IS the
+    # wrapper's storage — stack axes lead, lax.scan slices per layer.
+    sp = cache.get(w, _stacked_rhs_dnums(w.ndim), cfg, dtype=compute,
+                   layout="stack_leading")
+    k = int(sp.digits.shape[nstack])
+    return PresplitWeight(w, sp.digits, sp.scale, sp.base, sp.gbase,
+                          int(sp.beta), cfg.split, k)
+
+
+def wrap_params(params, engine: MatmulEngine,
+                cache: Optional[sc.SplitCache] = None):
+    """Return ``(wrapped_params, cache)`` — a copy of the tree with every
+    wrappable projection weight frozen through ``cache`` (created when
+    None).  Non-ozimmu engines return the tree untouched.
+
+    Re-wrapping after a weight update is exactly this call again: updated
+    leaves are new arrays (new identity ⇒ cache miss ⇒ fresh split, and
+    the dropped old arrays take their cache entries with them via the
+    weakref anchors); unchanged leaves hit the cache.
+    """
+    if cache is None:
+        cache = sc.SplitCache()
+    if not engine.is_ozimmu:
+        return params, cache
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, path + (str(i),))
+                              for i, v in enumerate(tree))
+        if tree is not None and _wrappable(path, tree):
+            return freeze_weight(tree, engine, cache)
+        return tree
+
+    return walk(params, ()), cache

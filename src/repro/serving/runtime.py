@@ -1,0 +1,418 @@
+"""ServingRuntime — the continuous-batching inference engine room.
+
+Ties together the scheduler (host policy), the per-slot / paged caches,
+the presplit weight wrapping, and two jitted device steps:
+
+* ``decode``: one token for every active slot, each at its OWN sequence
+  position (the per-slot ``cur_len`` vector the model families accept).
+  Free slots compute garbage that a per-slot select discards, so ONE
+  compiled step serves any occupancy pattern.
+* ``prefill`` (per bucket length Lb): a ``lax.scan`` of the decode step
+  over Lb positions, teacher-forcing the prompts of the newly admitted
+  slots RIGHT-ALIGNED in the bucket — every prompt ends at the last scan
+  step, so one compiled call serves mixed prompt lengths and its final
+  logits are every new slot's first-token prediction (TTFT is one call
+  after admission).  Slots not being prefilled are frozen functionally:
+  the scan runs on a cache copy and a per-slot select keeps their old
+  state (bitwise — no model support needed).  State families
+  (ssm/hybrid) bucket by exact length instead: their recurrent states
+  integrate every fed token, so right-padding can't be masked after the
+  fact (docs/serving.md).
+
+The weight split-cache: with an ozimmu engine, ``wrap_params`` freezes
+every projection weight's int8 digit slices once (eagerly, through
+``repro.core.split_cache.SplitCache``), and every jitted step consumes
+the wrapped tree — decode-time B-side splitting drops out entirely,
+bit-identical to the unwrapped path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import use_rules
+from repro.models import api
+from repro.serving import presplit as presplit_mod
+from repro.serving.kvcache import PagedKV, SlotCacheOps
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["ServingRuntime"]
+
+_STATE_FAMILIES = ("ssm", "hybrid")
+
+
+class ServingRuntime:
+    """Continuous-batching server over one model + parameter set.
+
+    Args:
+      cfg: ModelConfig (the engine spec rides inside it).
+      params: model parameters (raw; wrapped internally when presplit).
+      slots: decode-slot count (the compiled batch dimension).
+      max_len: per-slot cache capacity (prompt + generation budget).
+      page_block: positions per KV block — enables the paged pool
+        (attention-cache families only); None keeps the monolithic cache.
+      page_blocks: pool size in blocks (default: full capacity,
+        slots * max_len / page_block; smaller values exercise eviction).
+      presplit: freeze weight splits (default: on for ozimmu engines).
+      ctx: static per-slot context for the vlm/encdec families, shaped
+        for ONE slot (the runtime shares it across slots, matching the
+        pre-runtime serve driver).
+      now: clock (injectable for deterministic tests).
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 128,
+                 page_block: Optional[int] = None,
+                 page_blocks: Optional[int] = None,
+                 presplit: Optional[bool] = None, ctx=None,
+                 now=time.monotonic):
+        self.cfg, self.model = cfg, api.get_model(cfg)
+        self.n_slots, self.max_len = slots, max_len
+        self.ctx = ctx
+        engine = cfg.engine
+        self.split_cache = None
+        self._wrapped_bytes = 0       # weight bytes whose split is frozen
+        self._avoided_split_bytes = 0  # splitter input bytes skipped so far
+        use_presplit = engine.is_ozimmu if presplit is None else presplit
+        if use_presplit and engine.is_ozimmu:
+            self.params, self.split_cache = presplit_mod.wrap_params(
+                params, engine)
+            oz = engine.ozimmu_config
+            itemsize = 8 if (oz.accum_dtype == "f64"
+                             and jax.config.jax_enable_x64) else 4
+            from repro.core.engine import PresplitWeight
+            self._wrapped_bytes = sum(
+                int(np.prod(w.array.shape)) * itemsize
+                for w in jax.tree_util.tree_leaves(
+                    self.params,
+                    is_leaf=lambda x: isinstance(x, PresplitWeight))
+                if isinstance(w, PresplitWeight))
+        else:
+            self.params = params
+        self.sched = Scheduler(
+            slots, bucket="exact" if cfg.family in _STATE_FAMILIES
+            else "pow2")
+        self.ops = SlotCacheOps(cfg, self.model)
+        self.metrics = ServingMetrics(now=now)
+        self._now = now
+
+        batch_ctx = None if ctx is None else jnp.concatenate(
+            [ctx] * slots, axis=0)
+        self.paged: Optional[PagedKV] = None
+        if page_block is not None:
+            if not PagedKV.supported(cfg, self.model, max_len):
+                raise ValueError(
+                    f"paged KV unsupported for family {cfg.family!r} "
+                    f"(see repro.serving.kvcache); use page_block=None")
+            self.paged = PagedKV(cfg, self.model, slots, max_len,
+                                 block=page_block, n_blocks=page_blocks)
+            self.cache = None
+        else:
+            self.cache = self.model.init_cache(cfg, slots, max_len,
+                                               params=self.params,
+                                               ctx=batch_ctx)
+        # single-slot templates are built with sharding rules disabled: a
+        # batch-of-1 cache cannot satisfy a `cache_batch -> data` rule
+        # (jit arg shardings need exact divisibility); the replicated
+        # template scatters into the sharded cache under GSPMD fine.
+        with use_rules(None):
+            self._template_full = None if self.paged is not None else \
+                self.model.init_cache(cfg, 1, max_len, params=self.params,
+                                      ctx=ctx)
+        # host-side per-slot decode state
+        self._cur = np.ones((slots,), np.int32)
+        self._last_tok = np.zeros((slots,), np.int32)
+        self._decode = jax.jit(self._decode_impl)
+        self._decode_paged = jax.jit(self._decode_paged_impl)
+        self._prefill_fns = {}
+        self._evictions_at_reset = 0
+        from repro.core.engine import presplit_trace_counts
+        self._presplit_counts0 = presplit_trace_counts()
+        self._presplit_rate = None    # measured once steps have traced
+
+    # ------------------------------------------------------------------
+    # jitted step bodies
+    # ------------------------------------------------------------------
+
+    def _step(self, params, cache, toks, cur):
+        logits, new_cache = self.model.decode_step(params, self.cfg, cache,
+                                                   toks, cur)
+        nxt = jnp.argmax(logits[:, -1, :self.cfg.vocab],
+                         axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    def _decode_impl(self, params, cache, toks, cur, active):
+        # no per-slot select here: inactive slots carry cur == 0, which
+        # makes their cache-row writes no-ops (layers.cache_update_row);
+        # their other leaves may take garbage, but every leaf is reset
+        # from the template at admission before reuse.  A select would
+        # cost one full pass over every cache leaf per decoded token.
+        del active
+        return self._step(params, cache, toks, cur)
+
+    def _decode_paged_impl(self, params, pool, tables, toks, cur, active):
+        paged = self.paged
+        cache = paged._gather(pool, tables)
+        nxt, new_cache = self._step(params, cache, toks, cur)
+        pool = paged._scatter_rows(pool, tables, new_cache, cur, active)
+        return nxt, pool
+
+    def _prefill_body(self, params, cache, toks, start, newmask):
+        """scan of the decode step over the bucket; right-aligned."""
+        Lb = toks.shape[1]
+
+        def body(c, i):
+            cur = jnp.where(newmask & (i >= start), i - start + 1, 0)
+            tok = jax.lax.dynamic_slice_in_dim(toks, i, 1, axis=1)
+            logits, c = self.model.decode_step(params, self.cfg, c, tok,
+                                               cur)
+            return c, logits[:, -1]
+
+        cache, logits = jax.lax.scan(body, cache, jnp.arange(Lb))
+        nxt = jnp.argmax(logits[-1][:, :self.cfg.vocab],
+                         axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    # per-instance memoization by bucket length (NOT functools.lru_cache
+    # on the bound method — a class-level cache keyed on self would pin
+    # every runtime, its params, and its cache alive for process life)
+    def _prefill_fn(self, Lb: int):
+        fn = self._prefill_fns.get(Lb)
+        if fn is None:
+            def impl(params, cache, toks, start, newmask):
+                nxt, after = self._prefill_body(params, cache, toks,
+                                                start, newmask)
+                return nxt, self.ops.select_slots(after, cache, newmask)
+            fn = self._prefill_fns[Lb] = jax.jit(impl)
+        return fn
+
+    def _prefill_paged_fn(self, Lb: int):
+        fn = self._prefill_fns.get(("paged", Lb))
+        if fn is None:
+            def impl(params, pool, tables, toks, start, newmask):
+                cache0 = self.paged._gather(pool, tables)
+                nxt, after = self._prefill_body(params, cache0, toks,
+                                                start, newmask)
+                return nxt, self.ops.select_slots(after, cache0, newmask)
+            fn = self._prefill_fns[("paged", Lb)] = jax.jit(impl)
+        return fn
+
+    # ------------------------------------------------------------------
+    # host loop
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int,
+               eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> Request:
+        plen = len(prompt)
+        if plen + max_new > self.max_len and \
+                self.cfg.family not in _STATE_FAMILIES and \
+                not self.cfg.window:
+            raise ValueError(f"prompt({plen}) + max_new({max_new}) exceeds "
+                             f"max_len={self.max_len}")
+        req = self.sched.submit(prompt, max_new, eos_id=eos_id,
+                                arrival=self._now() if arrival is None
+                                else arrival)
+        self.metrics.requests_submitted += 1   # after validation
+        return req
+
+    def _alloc_or_evict(self, slot: int, length: int) -> bool:
+        """Paged block allocation with eviction pressure; False when the
+        requesting slot itself was evicted."""
+        if self.paged is None:
+            return True
+        while not self.paged.ensure(slot, length):
+            victim = self.sched.pick_victim(protect=slot)
+            if victim is None:
+                victim = slot       # nothing else to take — preempt self
+            self.sched.evict(victim)
+            self.paged.free_slot(victim)
+            if victim == slot:
+                return False
+        return True
+
+    def _do_prefills(self, admissions: List[Tuple[int, Request]]):
+        for Lb, group in self.sched.prefill_groups(admissions):
+            group = list(group)
+            # paged: allocate blocks for the prompts first (may evict
+            # group members — drop those from this prefill call)
+            ready = []
+            for slot, req in group:
+                if self.sched.slots[slot].request is not req:
+                    continue    # evicted by an earlier bucket this round
+                n_pref = len(req.prefill_tokens())
+                if self._alloc_or_evict(slot, n_pref):
+                    ready.append((slot, req))
+            # a later allocation may have evicted an earlier group member
+            ready = [(s, r) for s, r in ready
+                     if self.sched.slots[s].request is r]
+            if not ready:
+                continue
+            toks = np.zeros((self.n_slots, Lb), np.int32)
+            start = np.full((self.n_slots,), Lb, np.int32)
+            newmask = np.zeros((self.n_slots,), bool)
+            for slot, req in ready:
+                pt = req.prefill_tokens()
+                toks[slot, Lb - len(pt):] = pt
+                start[slot] = Lb - len(pt)
+                newmask[slot] = True
+            if self.paged is not None:
+                fn = self._prefill_paged_fn(Lb)
+                tables = self.paged.device_tables()
+                nxt, after = fn(self.params, self.paged.pool, tables,
+                                jnp.asarray(toks), jnp.asarray(start),
+                                jnp.asarray(newmask))
+                for slot, req in ready:
+                    self.paged.write_slot_prefix(
+                        slot, after, len(req.prefill_tokens()))
+            else:
+                # reset the slots to a fresh template (clears stale cache
+                # rows; writes the vlm/encdec cross-KV context)
+                for slot, _ in ready:
+                    self.cache = self.ops.reset_slot(
+                        self.cache, slot, self._template_full)
+                fn = self._prefill_fn(Lb)
+                nxt, self.cache = fn(self.params, self.cache,
+                                     jnp.asarray(toks), jnp.asarray(start),
+                                     jnp.asarray(newmask))
+            nxt = np.asarray(nxt)
+            now = self._now()
+            self.metrics.prefill_calls += 1
+            # every scanned position consumes every frozen weight split
+            self._avoided_split_bytes += Lb * self._wrapped_bytes
+            for slot, req in ready:
+                self.metrics.prefill_tokens += len(req.prefill_tokens())
+                self.metrics.tokens_generated += 1  # the first new token
+                finished = self.sched.on_prefilled(slot, int(nxt[slot]),
+                                                   now)
+                self._cur[slot] = self.sched.slots[slot].pos + 1 \
+                    if not finished else 1
+                self._last_tok[slot] = int(nxt[slot])
+                if finished:
+                    self._finish(slot, req, now)
+
+    def _finish(self, slot: int, req: Request, now: float):
+        if self.paged is not None:
+            self.paged.free_slot(slot)
+        self.metrics.record_finish(req, now)
+
+    def _do_decode(self):
+        active_idx = self.sched.active_slots()
+        if not active_idx:
+            return
+        active = np.zeros((self.n_slots,), bool)
+        active[active_idx] = True
+        # per-slot position of the token being written this step; 0 for
+        # idle slots = "write nothing" (cache_update_row no-op)
+        cur = np.where(active, self._cur, 0).astype(np.int32)
+        if self.paged is not None:
+            # this step writes row cur-1, so the slot needs `cur` positions
+            survivors = [slot for slot in active_idx
+                         if self._alloc_or_evict(slot, int(cur[slot]))]
+            survivors = [s for s in survivors
+                         if self.sched.slots[s].request is not None]
+            if len(survivors) != len(active_idx):
+                active[:] = False
+                active[survivors] = True
+                active_idx = survivors
+                if not active_idx:
+                    return
+        toks = self._last_tok[:, None].astype(np.int32)
+        if self.paged is not None:
+            tables = self.paged.device_tables()
+            nxt, pool = self._decode_paged(
+                self.params, self.paged.pool, tables, jnp.asarray(toks),
+                jnp.asarray(cur), jnp.asarray(active))
+            self.paged.pool = pool
+        else:
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(cur), jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        now = self._now()
+        self.metrics.decode_steps += 1
+        self._avoided_split_bytes += self._wrapped_bytes
+        for slot in active_idx:
+            req = self.sched.slots[slot].request
+            self.metrics.tokens_generated += 1
+            finished = self.sched.on_token(slot, int(nxt[slot]), now)
+            if finished:
+                self._finish(slot, req, now)
+            else:
+                self._cur[slot] = self.sched.slots[slot].pos + 1
+                self._last_tok[slot] = int(nxt[slot])
+
+    def step(self) -> bool:
+        """One scheduler round: admit + prefill new requests, then decode
+        one token for every active slot.  Returns False when idle."""
+        if self.sched.all_done:
+            return False
+        self.metrics.start()
+        self.metrics.sample_queue(self.sched.queue_depth)
+        admissions = self.sched.admit()
+        if admissions:
+            self._do_prefills(admissions)
+        self._do_decode()
+        return True
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[str, Any]:
+        """Drive the loop until every submitted request finished (or
+        ``max_steps`` scheduler rounds); returns the metrics summary."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self.metrics.stop()
+        # evictions within THIS metrics window (reset_metrics snapshots)
+        self.metrics.evictions = self.sched.evictions - \
+            self._evictions_at_reset
+        if self.split_cache is not None:
+            d = self.split_cache.stats.as_dict()
+            # MEASURED hit rate from the engine's trace-time consumption
+            # counters: the fraction of wrapped-weight contractions whose
+            # frozen split actually applied (a silent `usable_split`
+            # fallback — dnums/spec/dtype drift — lowers it, which is
+            # what the bench gate exists to catch).  Compiled steps count
+            # once at trace time; a window with no fresh traces (warm
+            # replay after reset_metrics) keeps the last measured rate.
+            from repro.core.engine import presplit_trace_counts
+            counts = presplit_trace_counts()
+            d_used = counts["used"] - self._presplit_counts0["used"]
+            d_fb = counts["fallback"] - self._presplit_counts0["fallback"]
+            if d_used + d_fb:
+                self._presplit_rate = d_used / (d_used + d_fb)
+            rate = self._presplit_rate
+            if rate is None:
+                rate = 1.0 if self._wrapped_bytes else 0.0
+            d.update({
+                "frozen_weight_bytes": self._wrapped_bytes,
+                "avoided_split_bytes": self._avoided_split_bytes,
+                "weight_split_hit_rate": rate,
+            })
+            self.metrics.split_cache = d
+        return self.metrics.summary()
+
+    def reset_metrics(self):
+        """Fresh metrics window (e.g. timing a steady-state pass after a
+        warm-up replay compiled every bucket).  Scheduler, caches, and
+        jit caches are untouched — the runtime keeps serving."""
+        self.metrics = ServingMetrics(now=self._now)
+        self._avoided_split_bytes = 0
+        self._evictions_at_reset = self.sched.evictions
+
+    # convenience for tests / examples ---------------------------------
+
+    def generate(self, prompts: List[np.ndarray], max_new: int,
+                 eos_id: Optional[int] = None) -> List[np.ndarray]:
+        """Submit a batch and run to completion; returns prompt+generated
+        per request, in submission order."""
+        reqs = [self.submit(p, max_new, eos_id=eos_id) for p in prompts]
+        self.run()
+        return [np.concatenate([r.prompt,
+                                np.asarray(r.generated, np.int32)])
+                for r in reqs]

@@ -473,6 +473,79 @@ def test_oz2_sharded_bitwise_both_modes():
     """)
 
 
+def test_presplit_sharded_bitwise_all_variants():
+    """Serving split-cache x @mesh: a frozen B-side split entering the
+    shard_map pre-sharded along the contraction axis is bit-identical to
+    the sharded uncached path (int32 reduction) for every variant incl.
+    :fused, and to the single-device presplit path — the cached
+    full-matrix digit grid IS the pmax-agreed grid (docs/serving.md)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu, split_cache
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(9)
+        a = jnp.asarray(rng.standard_normal((24, 256)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        cache = split_cache.SplitCache()
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+                     "oz2_b", "oz2_h"):
+            for pallas in (False, "fused"):
+                if pallas == "fused" and name == "ozimmu_rn":
+                    continue  # adaptive RN has no fused splitter
+                cfg = ozimmu.VARIANTS[name].with_(
+                    k=5, accum_dtype="df32", use_pallas=pallas,
+                    fast=(name == "oz2_h"))
+                ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+                with set_mesh(mesh):
+                    mcfg = cfg.with_(mesh_axis="model")
+                    sp = cache.get(b, dn, mcfg)
+                    got = jax.jit(lambda a, b, sp: ozimmu.ozimmu_dot_general(
+                        a, b, dn, mcfg, rhs_presplit=sp))(a, b, sp)
+                    unc = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                        a, b, dn, mcfg))(a, b)
+                assert bool(jnp.all(got == unc)), (name, pallas)
+                assert bool(jnp.all(got == ref)), (name, pallas)
+            print(name, "presplit sharded bitwise OK")
+        print("OK")
+    """)
+
+
+def test_serving_runtime_mesh_smoke():
+    """The serving runtime end-to-end under a (data, model) mesh with an
+    @model engine: generates finite tokens, split-cache active."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import configs
+        from repro.distributed import compat
+        from repro.distributed.sharding import use_rules
+        from repro.launch.mesh import make_test_mesh, mesh_rules
+        from repro.models import api
+        from repro.serving import ServingRuntime
+
+        arch = "internlm2_1_8b"
+        mesh = make_test_mesh(data=2, model=4)
+        cfg = configs.get_config(arch, smoke=True,
+                                 engine_spec="ozimmu_h-4:df32@model")
+        with compat.set_mesh(mesh), use_rules(mesh_rules(mesh, arch)):
+            model = api.get_model(cfg)
+            params, _ = model.init(jax.random.PRNGKey(0), cfg)
+            rt = ServingRuntime(cfg, params, slots=2, max_len=32)
+            rng = np.random.default_rng(0)
+            prompts = [rng.integers(0, cfg.vocab, size=6, dtype=np.int32)
+                       for _ in range(3)]
+            outs = rt.generate(prompts, max_new=3)
+        assert all(len(o) == 9 for o in outs)
+        s = rt.metrics.summary()
+        assert s["requests"]["finished"] == 3
+        assert s["split_cache"]["weight_split_hit_rate"] == 1.0
+        print("OK")
+    """, x64=True)
+
+
 def test_psum_df32_error_free_vs_plain_f32():
     """The compensated DF32 reduction keeps what a plain f32 psum rounds
     away: partials engineered so small terms vanish under f32 summation."""
