@@ -18,15 +18,19 @@ from benchmarks.exact import dd_matmul, max_relative_error
 from repro.core import ozimmu
 
 VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
-            "oz2_b", "oz2_h", "oz2_h_fast")
+            "oz2_b", "oz2_h", "oz2_h_fast", "oz2_h_fast2")
 
 
 def variant_cfg(variant: str, k: int):
     """Bench variant label -> config; the ``_fast`` suffix selects the
-    oz2 diagonal-band mode."""
-    fast = variant.endswith("_fast")
-    name = variant[:-5] if fast else variant
-    return ozimmu.VARIANTS[name].with_(k=k, fast=fast)
+    oz2 diagonal-band mode, ``_fast2`` the improved-scaling band mode."""
+    if variant.endswith("_fast2"):
+        name, fast = variant[:-6], "fast2"
+    elif variant.endswith("_fast"):
+        name, fast = variant[:-5], True
+    else:
+        name, fast = variant, False
+    return ozimmu.canonical_fast2(ozimmu.VARIANTS[name].with_(k=k, fast=fast))
 
 
 def make_phi_matrix(rng, m, n, phi):

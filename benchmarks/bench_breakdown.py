@@ -26,7 +26,7 @@ from repro.core.accumulate import (num_highprec_adds, oz2_num_highprec_adds,
 from repro.core.splitting import compute_beta, compute_r, digit_bits
 
 VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
-            "oz2_h", "oz2_h_fast")
+            "oz2_h", "oz2_h_fast", "oz2_h_fast2")
 
 
 def _counts(variant: str, n: int, k: int):
@@ -34,7 +34,7 @@ def _counts(variant: str, n: int, k: int):
     the bench's paper-faithful f64 accumulator (52-bit ladder words)."""
     beta = compute_beta(n)
     if variant.startswith("oz2"):
-        fast = variant.endswith("_fast")
+        fast = variant.endswith("_fast") or variant.endswith("_fast2")
         dbits = digit_bits(variant_split(variant), beta)
         r = compute_r(n, beta, dbits)
         return (oz2_num_pairs(k, fast),
@@ -91,7 +91,8 @@ def main(out_json=None, quick=False):
     base = {r["k"]: r for r in rows if r["variant"] == "ozimmu"}
     h = {r["k"]: r for r in rows if r["variant"] == "ozimmu_h"}
     for r in rows:
-        if r["variant"] in ("ozimmu_ef", "ozimmu_h", "oz2_h", "oz2_h_fast"):
+        if r["variant"] in ("ozimmu_ef", "ozimmu_h", "oz2_h", "oz2_h_fast",
+                            "oz2_h_fast2"):
             sp = base[r["k"]]["total_ms"] / r["total_ms"]
             r["speedup_vs_ozimmu"] = sp
     checks = {
@@ -119,6 +120,22 @@ def main(out_json=None, quick=False):
         "oz2_fast_total_faster_than_h": all(
             r["total_ms"] < h[r["k"]]["total_ms"] for r in rows
             if r["variant"] == "oz2_h_fast"),
+        # fast2 (improved scaling) runs the same band + int8 GEMM count as
+        # fast; its only extra cost is the exact diag-unscale pass, so the
+        # modeled total stays within 5% of fast and still beats group-EF
+        "oz2_fast2_same_gemms_as_fast": all(
+            r["int8_gemms"] == next(
+                s["int8_gemms"] for s in rows
+                if s["variant"] == "oz2_h_fast" and s["k"] == r["k"])
+            for r in rows if r["variant"] == "oz2_h_fast2"),
+        "oz2_fast2_total_near_fast": all(
+            r["total_ms"] <= 1.05 * next(
+                s["total_ms"] for s in rows
+                if s["variant"] == "oz2_h_fast" and s["k"] == r["k"])
+            for r in rows if r["variant"] == "oz2_h_fast2"),
+        "oz2_fast2_total_faster_than_h": all(
+            r["total_ms"] < h[r["k"]]["total_ms"] for r in rows
+            if r["variant"] == "oz2_h_fast2"),
     }
     for name, ok in checks.items():
         print(f"[breakdown] {name}: {'OK' if ok else 'CHECK'}")

@@ -11,7 +11,8 @@ import json
 
 from benchmarks.model_v5e import emulated_tflops
 
-VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h", "oz2_h_fast")
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+            "oz2_h_fast", "oz2_h_fast2")
 
 
 def run(ns=(1024, 2048, 4096, 8192, 16384), ks=(3, 7, 8, 12)):

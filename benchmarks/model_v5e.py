@@ -23,11 +23,17 @@ from repro.core.splitting import compute_beta, compute_r, digit_bits
 
 
 def variant_split(variant: str) -> str:
-    """Bench variant label (e.g. ``oz2_h_fast``) -> splitting strategy
-    name, via the engine's own variant table — single source of truth."""
-    from repro.core.ozimmu import VARIANTS
-    base = variant[:-5] if variant.endswith("_fast") else variant
-    return VARIANTS[base].split
+    """Bench variant label (e.g. ``oz2_h_fast``, ``oz2_h_fast2``) ->
+    splitting strategy name, via the engine's own variant table and its
+    fast2 canonicalization — single source of truth."""
+    from repro.core.ozimmu import VARIANTS, canonical_fast2
+    if variant.endswith("_fast2"):
+        base, fast = variant[:-6], "fast2"
+    elif variant.endswith("_fast"):
+        base, fast = variant[:-5], True
+    else:
+        base, fast = variant, False
+    return canonical_fast2(VARIANTS[base].with_(fast=fast)).split
 
 PEAK_INT8 = 394e12      # MACs*2 per second (ops/s)
 HBM_BW = 819e9
@@ -59,7 +65,9 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     """Modeled seconds per phase on one v5e chip.
 
     variant: ozimmu | ozimmu_rn | ozimmu_ef | ozimmu_h | oz2_b | oz2_h,
-    the oz2 names optionally suffixed ``_fast`` (the diagonal-band mode).
+    the oz2 names optionally suffixed ``_fast`` (the diagonal-band mode)
+    or ``_fast2`` (same band with the improved per-row scaling; costs one
+    extra diag-unscale RMW pass over the output).
     fused_split: single-HBM-read fused extraction (our Pallas kernel);
     False models Ootomo-style per-slice passes.
     fused_epilogue: one-pass convert+scale+add with the accumulator RMW'd
@@ -68,7 +76,8 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     """
     beta = compute_beta(n)
     oz2 = variant.startswith("oz2")
-    oz2_fast = variant.endswith("_fast")
+    oz2_fast2 = variant.endswith("_fast2")
+    oz2_fast = oz2_fast2 or variant.endswith("_fast")
     dbits = digit_bits(variant_split(variant), beta)
     r = compute_r(n, beta, dbits) if oz2 else compute_r(n, beta)
     group_ef = variant in ("ozimmu_ef", "ozimmu_h")
@@ -105,6 +114,9 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
         # but the hp accumulator is RMW'd only once per window
         reads_bytes = oz2_num_chunks(k, r, oz2_fast) * 4
         rmw_bytes = hp_terms * (2 * hp_b if fused_epilogue else 4 * hp_b)
+        if oz2_fast2:
+            # improved scaling: one exact diag-unscale RMW of the output
+            rmw_bytes += 2 * hp_b
         accum_bytes = m * p * (reads_bytes + rmw_bytes)
     else:
         per_term = (4 + 2 * hp_b) if fused_epilogue else (4 + 4 * hp_b)

@@ -2,6 +2,7 @@
 from repro.core.splitting import (Split, compute_beta, compute_r,
                                   split_bitmask, split_rn, split_rn_const,
                                   split_oz2, split_oz2_bitmask,
+                                  split_oz2_fast2, split_oz2_bitmask_fast2,
                                   reconstruct, residual)
 from repro.core.accumulate import (int8_gemm, matmul_naive, matmul_group_ef,
                                    matmul_oz2, DF32, num_highprec_adds,

@@ -342,13 +342,14 @@ def _clog2(x: int) -> int:
     return max(0, (int(x) - 1).bit_length())
 
 
-def oz2_groups(k: int, fast: bool):
+def oz2_groups(k: int, fast):
     """Anti-diagonal group indices g = s + t evaluated by the oz2 modes.
 
     Full mode keeps every group of the k x k pair square (g = 2..2k) — the
     complete product of the two k-slice fixed-point approximations.  Fast
-    mode keeps the diagonal band g <= k + 1 only: on the shared grid the
-    dropped pairs all lie at least ``beta * k`` bits below the global
+    mode (``fast`` truthy: ``True`` or ``"fast2"``) keeps the diagonal
+    band g <= k + 1 only: on the shared grid the dropped pairs all lie at
+    least ``beta * k`` bits below the (global, or per-row for fast2)
     product magnitude, i.e. at the splitting-truncation level itself.
     """
     return range(2, (k + 1 if fast else 2 * k) + 1)
@@ -443,13 +444,34 @@ def _oz2_accum_plain(word: jax.Array, scale: jax.Array,
     return acc + word.astype(acc.dtype) * scale[..., None, None]
 
 
+def _oz2_unscale(acc, ra: jax.Array, rb: jax.Array):
+    """The fast2 epilogue: ``C = diag(ra) C_hat diag(rb)``.
+
+    ``ra``/``rb`` are the exact power-of-two equilibration factors
+    ``base / gbase`` of the fast2 splits, so both multiplies are exact;
+    for a df32 accumulator hi and lo scale by the same power of two,
+    preserving the ``|lo| <= ulp(hi)/2`` invariant.  This is the default
+    (inline jnp) implementation of ``matmul_oz2``'s ``unscale_fn`` hook
+    (the fused path substitutes ``repro.kernels.ops.oz2_unscale_update``,
+    bit-identical).
+    """
+    if isinstance(acc, DF32):
+        ra32 = ra.astype(jnp.float32)
+        rb32 = rb.astype(jnp.float32)
+        return DF32(_outer_scale(acc.hi, ra32, rb32),
+                    _outer_scale(acc.lo, ra32, rb32))
+    return _outer_scale(acc, ra.astype(acc.dtype), rb.astype(acc.dtype))
+
+
 def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
-               out_dtype=None, fast: bool = False, r: Optional[int] = None,
+               out_dtype=None, fast: Union[bool, str] = False,
+               r: Optional[int] = None,
                n_total: Optional[int] = None,
                digit_bits: Optional[int] = None, group_gemm_fn=None,
                partial: bool = False,
                product_reduce: Optional[Callable] = None,
-               scale_accum_fn: Optional[Callable] = None
+               scale_accum_fn: Optional[Callable] = None,
+               unscale_fn: Optional[Callable] = None
                ) -> Union[jax.Array, DF32]:
     """Ozaki-II evaluation on constant-scaling splits.
 
@@ -461,8 +483,20 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
     and (ii) consecutive groups additionally fold into one integer word by
     exact shifts — the exponent ladder — before a SINGLE high-precision
     convert+scale+add per window (``ladder_width`` groups at a time).
-    Fast mode evaluates the g <= k+1 band (k(k+1)/2 pairs, the classic
-    count); full mode all k^2 pairs.
+    Fast mode (``fast=True``) evaluates the g <= k+1 band (k(k+1)/2
+    pairs, the classic count); full mode all k^2 pairs.
+
+    ``fast="fast2"`` selects the improved fast-mode scaling (Kawakami &
+    Takahashi): the same g <= k+1 band, but on the fast2 splits
+    (``splitting.split_oz2_fast2`` / ``split_oz2_bitmask_fast2``) whose
+    shared grid is the equilibrated constant ``gbase = 2`` — the ladder
+    computes ``C_hat = A_hat B_hat`` of the row/column-equilibrated
+    operands, and the exact power-of-two factors ``ra = base_A / gbase``
+    / ``rb = base_B / gbase`` are applied as one final two-sided
+    diagonal unscale ``C = diag(ra) C_hat diag(rb)`` (exact, so it
+    commutes with ``partial`` reduction and rounding).  ``unscale_fn(acc,
+    ra, rb)`` overrides that epilogue (the fused Pallas hook
+    ``repro.kernels.ops.oz2_unscale_update``; bit-identical).
 
     ``partial`` / ``product_reduce`` follow the module contract: the
     product psum applies to the stacked int32 chunk products BEFORE the
@@ -479,6 +513,11 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
         raise ValueError("oz2 accumulation needs constant-scaling splits "
                          "(split_oz2 / split_oz2_bitmask); got per-row "
                          "scales")
+    fast2 = fast == "fast2"
+    if fast2 and (sa.base is None or sb.base is None):
+        raise ValueError("fast2 needs the per-row bases of the fast2 "
+                         "splits (split_oz2_fast2 / "
+                         "split_oz2_bitmask_fast2)")
     k = sa.digits.shape[0]
     assert sb.digits.shape[0] == k
     beta = sa.beta
@@ -510,6 +549,15 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
             word = t if word is None else word + t
         return word, g_hi
 
+    def unscale(acc):
+        """The fast2 epilogue (identity otherwise): exact two-sided
+        power-of-two unscale by the equilibration factors base/gbase."""
+        if not fast2:
+            return acc
+        ra = sa.base * (1.0 / sa.gbase[..., None])
+        rb = sb.base * (1.0 / sb.gbase[..., None])
+        return (unscale_fn or _oz2_unscale)(acc, ra, rb)
+
     if accum == "df32":
         fn = scale_accum_fn or _oz2_accum_df32
         acc = df32_zero(out_shape)
@@ -517,6 +565,7 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
             word, g_hi = fold(window)
             acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi,
                                       jnp.float32), acc)
+        acc = unscale(acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
@@ -526,4 +575,5 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
         word, g_hi = fold(window)
         acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi, acc_dtype),
                  acc)
+    acc = unscale(acc)
     return acc if partial else acc.astype(out_dtype)

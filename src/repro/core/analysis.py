@@ -101,9 +101,22 @@ def _global_anchor(x: np.ndarray) -> float:
     return float(np.ldexp(1.0, int(e)))
 
 
+def _row_anchor(x: np.ndarray, axis: int) -> np.ndarray:
+    """Per-row (axis=1: per-column) power-of-two anchors >= the row maxima
+    — the fast2 equilibrated-grid anchors (conservative by <= 2x each,
+    like :func:`_global_anchor`); 0.0 for all-zero rows."""
+    rmax = np.max(np.abs(x), axis=axis)
+    out = np.zeros_like(rmax)
+    nz = rmax > 0
+    _, e = np.frexp(rmax[nz])
+    out[nz] = np.ldexp(np.ones_like(rmax[nz]), e)
+    return out
+
+
 def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
-                    fast: bool = True, u: float | None = None,
-                    adds: int | None = None) -> np.ndarray:
+                    fast: bool | str = True, u: float | None = None,
+                    adds: int | None = None,
+                    fast2: bool = False) -> np.ndarray:
     """Documented elementwise bound for the oz2 (constant-scaling) modes.
 
     With the shared grids anchored at ``EA = 2^ceil(log2 max|A|)`` (resp.
@@ -128,11 +141,29 @@ def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
     below the matrix maximum inherit the matrix-level absolute error — the
     price of constant scaling, and exactly what the adversarial oracle
     grid (tests/test_oracle.py) exercises.
+
+    ``fast2=True`` (equivalently ``fast="fast2"``) selects the improved
+    fast-mode scaling (Kawakami & Takahashi; spec token ``:fast2``): the
+    per-row power-of-two equilibration anchors every truncation at the
+    row's OWN magnitude, so the same bound holds with the scalar anchors
+    ``EA``/``EB`` replaced by the per-row/col anchor vectors ``EA_i =
+    2^ceil(log2 rowmax_i(A))`` / ``EB_j = 2^ceil(log2 colmax_j(B))`` —
+    in particular the dropped-band term tightens from ``8 k n t EA EB``
+    to the outer ``8 k n t EA_i EB_j``, which is what restores
+    near-full-mode accuracy on wide-exponent-spread operands.  The
+    ladder still evaluates the fast band, so the accumulation-count
+    accounting is the fast-mode one.
     """
     u = u if u is not None else unit_roundoff(a.dtype)
     n = a.shape[1]
     beta = compute_beta(n)
-    ea, eb = _global_anchor(a), _global_anchor(b)
+    fast2 = fast2 or fast == "fast2"
+    if fast2:
+        fast = True
+        ea = _row_anchor(a, axis=1)[:, None]   # (m, 1)
+        eb = _row_anchor(b, axis=0)[None, :]   # (1, p)
+    else:
+        ea, eb = _global_anchor(a), _global_anchor(b)
     t = 2.0 ** (-beta * k)
     colsum = np.sum(np.abs(b), axis=0)
     rowsum = np.sum(np.abs(a), axis=1)

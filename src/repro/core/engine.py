@@ -10,11 +10,16 @@ Specs (CLI flag ``--matmul_engine``):
     picks the smallest slice count meeting ``OzimmuConfig.target_eps``
     from the operands' probed exponent ranges (eager calls) or the
     static mantissa-coverage plan (inside jit).
-  * ``oz2_b[-k]``, ``oz2_h[-k]`` optionally ``:fast`` — Ozaki-II
-    constant-scaling emulation: one shared digit grid per matrix, all
-    slice-pair scales folded into a scalar exponent ladder
+  * ``oz2_b[-k]``, ``oz2_h[-k]`` optionally ``:fast`` or ``:fast2`` —
+    Ozaki-II constant-scaling emulation: one shared digit grid per
+    matrix, all slice-pair scales folded into a scalar exponent ladder
     (``core/accumulate.matmul_oz2``); ``:fast`` evaluates only the
-    s + t <= k + 1 band.  Auto-k plans against the OS-II error model.
+    s + t <= k + 1 band; ``:fast2`` runs the same band with improved
+    per-row power-of-two equilibration onto the shared grid (near
+    full-mode accuracy on wide-dynamic-range operands, same int8 GEMM
+    count — docs/algorithms.md#improved-fast-mode-scaling-fast2).  The
+    two tokens are mutually exclusive and reject non-oz2 variants.
+    Auto-k plans against the OS-II error model.
   * ``...:fused``                     — the one-HBM-pass Pallas pipeline:
     fused k-slice extraction, VMEM-resident group GEMMs, and the fused
     convert+scale+add epilogue; bit-identical to the XLA path and

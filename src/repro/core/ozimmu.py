@@ -20,7 +20,12 @@ full mode evaluates every k^2 slice pair, ``:fast`` mode only the
 anti-diagonal band s + t <= k + 1, and consecutive groups fold into one
 integer word before each high-precision add
 (``accumulate.matmul_oz2``) — strictly fewer high-precision adds than the
-group-EF path at equal k.
+group-EF path at equal k.  ``:fast2`` keeps the fast-mode band and cost
+but runs it on the improved per-row equilibrated scaling (Kawakami &
+Takahashi): each operand is exactly rescaled row/column-wise onto a
+constant shared grid and the power-of-two factors are unscaled after the
+ladder, anchoring the truncation error per row — near-full-mode accuracy
+at fast-mode GEMM/add counts.
 
 Two entry points:
 
@@ -74,9 +79,13 @@ class OzimmuConfig:
                                     # oz2_rn | oz2_bitmask (constant grid)
     accumulate: str = "group_ef"    # naive | group_ef | oz2 (exponent
                                     # ladder; needs an oz2_* split)
-    fast: bool = False              # oz2 only (spec token ``:fast``):
-                                    # evaluate the s+t <= k+1 band instead
-                                    # of all k^2 slice pairs
+    fast: Union[bool, str] = False  # oz2 only: ``True`` (spec token
+                                    # ``:fast``) evaluates the s+t <= k+1
+                                    # band instead of all k^2 slice pairs;
+                                    # ``"fast2"`` (token ``:fast2``) the
+                                    # same band under the improved per-row
+                                    # equilibrated scaling (the *_fast2
+                                    # splits + exact two-sided unscale)
     accum_dtype: str = "f64"        # f64 | f32 | df32
     use_pallas: Union[bool, str] = False
                                     # False: XLA everywhere.  True: group
@@ -120,7 +129,22 @@ _SPLITTERS = {
     "rn_const": splitting.split_rn_const,
     "oz2_rn": splitting.split_oz2,
     "oz2_bitmask": splitting.split_oz2_bitmask,
+    "oz2_rn_fast2": splitting.split_oz2_fast2,
+    "oz2_bitmask_fast2": splitting.split_oz2_bitmask_fast2,
 }
+
+
+def canonical_fast2(cfg: "OzimmuConfig") -> "OzimmuConfig":
+    """Tie ``cfg.fast == "fast2"`` and the ``*_fast2`` split names
+    together (they are one mode; ``parse_spec`` emits them jointly, but a
+    hand-built config may set only one half).  The split name is what
+    keys the split cache and the presplit-compatibility check, so the
+    normalization must happen before either looks at the config."""
+    if cfg.fast == "fast2" and not cfg.split.endswith("_fast2"):
+        return cfg.with_(split=cfg.split + "_fast2")
+    if cfg.split.endswith("_fast2") and cfg.fast != "fast2":
+        return cfg.with_(fast="fast2")
+    return cfg
 
 def digit_bits(cfg: "OzimmuConfig", beta: int) -> int:
     """Slice digit magnitude bits under ``cfg.split`` (sizes r / ladders);
@@ -140,12 +164,16 @@ def parse_spec(spec: str) -> OzimmuConfig:
     core/plan.py) and each ``:opt`` is an accumulator dtype
     (``f64``/``f32``/``df32``), ``fused`` (the one-HBM-pass Pallas
     pipeline), or — for the ``oz2_*`` variants only — ``fast`` (evaluate
-    the anti-diagonal band s + t <= k + 1 instead of all k^2 slice pairs).
+    the anti-diagonal band s + t <= k + 1 instead of all k^2 slice pairs)
+    or ``fast2`` (the same band under the improved per-row equilibrated
+    scaling — near-full-mode accuracy at fast-mode cost; mutually
+    exclusive with ``fast``).
     E.g. ``"ozimmu_h-auto:df32:fused@model"`` runs the fused pipeline,
     contraction-sharded over the ``model`` mesh axis with the exact int32
     cross-device reduction, with auto-planned k; ``"oz2_h-auto:fast"``
     runs the Ozaki-II fast mode with auto-planned k against the oz2 error
-    model; ``"...@model/df32"`` selects the compensated
+    model; ``"oz2_h-auto:fast2"`` the improved-scaling fast mode;
+    ``"...@model/df32"`` selects the compensated
     partial-accumulator reduction instead (see docs/distributed.md).
     """
     mesh_axis, mesh_reduce = None, "int32"
@@ -172,13 +200,18 @@ def parse_spec(spec: str) -> OzimmuConfig:
             if use_pallas == "fused":
                 raise ValueError("duplicate 'fused' token in engine spec")
             use_pallas = "fused"
-        elif opt == "fast":
+        elif opt in ("fast", "fast2"):
+            if fast == (opt if opt == "fast2" else True):
+                raise ValueError(f"duplicate {opt!r} token in engine spec")
             if fast:
-                raise ValueError("duplicate 'fast' token in engine spec")
-            fast = True
+                raise ValueError(f"conflicting fast-mode tokens in engine "
+                                 f"spec: {opt!r} after "
+                                 f"{'fast2' if fast == 'fast2' else 'fast'!r}"
+                                 f" (pick one)")
+            fast = "fast2" if opt == "fast2" else True
         else:
             raise ValueError(f"unknown engine spec option {opt!r}; "
-                             f"options: f64, f32, df32, fused, fast")
+                             f"options: f64, f32, df32, fused, fast, fast2")
     name, _, kstr = spec.partition("-")
     if name not in VARIANTS:
         raise ValueError(f"unknown ozimmu variant {name!r}; "
@@ -189,13 +222,15 @@ def parse_spec(spec: str) -> OzimmuConfig:
                          f"(an integer >= 1, or 'auto')")
     cfg = VARIANTS[name]
     if fast and cfg.accumulate != "oz2":
-        raise ValueError(f"the 'fast' token applies to the oz2_* variants "
-                         f"only (the ozimmu family always evaluates the "
-                         f"fast-mode band); got {name!r}")
-    return cfg.with_(k=cfg.k if (auto_k or not kstr) else int(kstr),
-                     auto_k=auto_k, accum_dtype=accum_dtype,
-                     use_pallas=use_pallas, fast=fast, mesh_axis=mesh_axis,
-                     mesh_reduce=mesh_reduce)
+        token = "fast2" if fast == "fast2" else "fast"
+        raise ValueError(f"the {token!r} token applies to the oz2_* "
+                         f"variants only (the ozimmu family always "
+                         f"evaluates the fast-mode band); got {name!r}")
+    return canonical_fast2(cfg.with_(
+        k=cfg.k if (auto_k or not kstr) else int(kstr),
+        auto_k=auto_k, accum_dtype=accum_dtype,
+        use_pallas=use_pallas, fast=fast, mesh_axis=mesh_axis,
+        mesh_reduce=mesh_reduce))
 
 
 def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
@@ -261,7 +296,7 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     sa, sb = split_operands(a, b, cfg, n_total=n_total,
                             rowmax_reduce=rowmax_reduce,
                             rhs_presplit=rhs_presplit)
-    group_gemm_fn = scale_accum_fn = pair_gemm_fn = None
+    group_gemm_fn = scale_accum_fn = pair_gemm_fn = unscale_fn = None
     if cfg.use_pallas:
         from repro.kernels import ops as kops  # lazy: kernels are optional
         if cfg.accumulate == "naive":
@@ -274,6 +309,7 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
             scale_accum_fn = (kops.oz2_scale_accum_update
                               if cfg.accumulate == "oz2"
                               else kops.scale_accum_update)
+            unscale_fn = kops.oz2_unscale_update
     if cfg.accumulate == "naive":
         return accumulate.matmul_naive(
             sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
@@ -285,7 +321,8 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
             sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype,
             fast=cfg.fast, n_total=n, digit_bits=digit_bits(cfg, sa.beta),
             group_gemm_fn=group_gemm_fn, partial=partial,
-            product_reduce=product_reduce, scale_accum_fn=scale_accum_fn)
+            product_reduce=product_reduce, scale_accum_fn=scale_accum_fn,
+            unscale_fn=unscale_fn)
     r = splitting.compute_r(n, sa.beta)
     return accumulate.matmul_group_ef(
         sa, sb, accum=cfg.accum_dtype, out_dtype=a.dtype, r=r,
@@ -447,6 +484,7 @@ def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
     if a.ndim < 2 or b.ndim < 2 or a.shape[-1] != b.shape[-2] or \
             a.shape[:-2] != b.shape[:-2]:
         raise ValueError(f"bad batched GEMM shapes {a.shape} @ {b.shape}")
+    cfg = canonical_fast2(cfg)
     if cfg.accum_dtype == "f64" and not jax.config.jax_enable_x64:
         # without x64 mode JAX truncates f64 to f32 anyway; downgrade
         # explicitly (the documented footgun — see docs/engine.md) instead

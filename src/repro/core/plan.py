@@ -140,8 +140,9 @@ def _clamp_k(k: int) -> int:
     return max(K_MIN, min(K_MAX, k))
 
 
-_TRUNC_SPLITS = ("bitmask", "oz2_bitmask")
-_OZ2_SPLITS = ("oz2_rn", "oz2_bitmask")
+_TRUNC_SPLITS = ("bitmask", "oz2_bitmask", "oz2_bitmask_fast2")
+_OZ2_SPLITS = ("oz2_rn", "oz2_bitmask", "oz2_rn_fast2",
+               "oz2_bitmask_fast2")
 
 
 def choose_k(n: int, beta: int, target_eps: float, *, split: str,
@@ -160,6 +161,11 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
     Cauchy-Schwarz — so the two probed gaps combine as ``max``, not sum
     (docs/algorithms.md#ozaki-scheme-ii).  Fast mode charges one extra bit
     for the dropped g > k+1 groups (they sit at the truncation level).
+    The fast2 splits charge the same bit (``fast`` arrives as the bool of
+    the config's fast-mode flag): fast2's per-row-anchored error is
+    elementwise <= the plain fast-mode error at equal k, so the resolved
+    k is equal — never larger — and the ``target_eps`` guarantee carries
+    over wherever plain fast mode met it.
     """
     guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split in _TRUNC_SPLITS
                            else 0)
@@ -334,7 +340,8 @@ def describe_config(cfg, m: int = 4096, n: int = 4096, p: int = 4096) -> str:
     kpart = (f"k=auto(target_eps={eps:.1e}, static {pl.k} @ n={n})"
              if getattr(cfg, "auto_k", False) else f"k={cfg.k}")
     fused = cfg.use_pallas == "fused"
-    mode = "/fast" if getattr(cfg, "fast", False) else ""
+    fast = getattr(cfg, "fast", False)
+    mode = "/fast2" if fast == "fast2" else "/fast" if fast else ""
     return (f"{cfg.split}/{cfg.accumulate}{mode}:{cfg.accum_dtype} {kpart}, "
             f"{'fused split+epilogue Pallas pipeline' if fused else 'pallas group-GEMM' if cfg.use_pallas else 'XLA path'}, "
             f"{pl.int8_gemms} int8 GEMMs / {pl.highprec_adds} hp adds")

@@ -22,14 +22,30 @@ Takahashi):
     the global |a| maximum instead of per-row maxima.
   * ``split_oz2_bitmask`` — the truncation analogue (Alg. 3 digits on the
     shared grid).
+  * ``split_oz2_fast2`` / ``split_oz2_bitmask_fast2`` — the *improved
+    scaling* of Kawakami & Takahashi (spec token ``:fast2``): every row
+    (column for ``axis=1``) is first equilibrated by its own power of two
+    ``rho_i`` (exact), so the shared grid of the equilibrated matrix is
+    the CONSTANT ``gbase = 2``, and the per-row factors ride along in
+    ``Split.base`` (``base_i = rho_i * gbase``) for the exact two-sided
+    unscale ``C = diag(base_A/gbase) C_hat diag(base_B/gbase)`` applied
+    by ``matmul_oz2`` after the ladder.  Because equilibration is a
+    power-of-two rescale, the digits are bitwise THE per-row splitter's
+    digits (``split_rn_const`` / ``split_bitmask``) — only the ladder's
+    interpretation changes — so the truncation error is anchored at each
+    row's own magnitude, recovering near-full-mode accuracy at fast-mode
+    cost (docs/algorithms.md#improved-fast-mode-scaling-fast2).
 
 The shared grid is what makes the oz2 accumulation path
 (``repro.core.accumulate.matmul_oz2``) able to fold every slice-pair scale
-into a single scalar exponent ladder; the price is that the truncation
-error is anchored at the *global* magnitude, not each row's own (see
-docs/algorithms.md#ozaki-scheme-ii).  Constant-scaling splits carry the
-scalar base in ``Split.gbase``; their ``scale``/``base`` fields broadcast
-it so every per-row consumer keeps working unchanged.
+into a single scalar exponent ladder; the price (for the plain oz2 splits)
+is that the truncation error is anchored at the *global* magnitude, not
+each row's own (see docs/algorithms.md#ozaki-scheme-ii) — the fast2 splits
+above remove exactly that price.  Constant-scaling splits carry the
+scalar base in ``Split.gbase``; the plain oz2 ``scale``/``base`` fields
+broadcast it so every per-row consumer keeps working unchanged, while the
+fast2 splits keep per-row ``scale``/``base`` (the reconstruct/residual
+contract stays per-row, i.e. tight).
 
 All three return a :class:`Split` with the unified convention
 
@@ -76,6 +92,8 @@ __all__ = [
     "split_rn_const",
     "split_oz2",
     "split_oz2_bitmask",
+    "split_oz2_fast2",
+    "split_oz2_bitmask_fast2",
     "reconstruct",
 ]
 
@@ -149,7 +167,7 @@ def compute_r(n: int, beta: int, digit_bits: Optional[int] = None) -> int:
 
 # splits whose digits lie in [-2^(beta-1), 2^(beta-1)] (round-to-nearest);
 # the rest span the full +-(2^beta - 1) truncation range
-RN_SPLITS = ("rn", "rn_const", "oz2_rn")
+RN_SPLITS = ("rn", "rn_const", "oz2_rn", "oz2_rn_fast2")
 
 
 def digit_bits(split: str, beta: int) -> int:
@@ -399,6 +417,56 @@ def split_oz2_bitmask(a: jax.Array, k: int, *, beta: Optional[int] = None,
     digits = _bitmask_extract(a, base, beta, k, axis)
     return Split(digits, _geo_scales(base, beta, k), base, beta, axis,
                  gbase=base[..., 0])
+
+
+def _with_fast2_gbase(s: Split) -> Split:
+    """Attach the constant equilibrated-grid base ``gbase = 2`` to a
+    per-row split (the fast2 contract).
+
+    ``base_i = rho_i * 2`` for both per-row strategies (``rho_i =
+    2^ceil(log2 rowmax_i)`` for RN, ``2^floor(log2 rowmax_i)`` for
+    truncation), so ``base_i / gbase`` recovers the exact power-of-two
+    equilibration factor ``rho_i`` that ``matmul_oz2`` unscales by.
+    """
+    return s._replace(gbase=jnp.full(s.base.shape[:-1], 2.0,
+                                     s.base.dtype))
+
+
+def split_oz2_fast2(a: jax.Array, k: int, *, beta: Optional[int] = None,
+                    axis: int = 0,
+                    rowmax_reduce: Optional[Callable] = None) -> Split:
+    """Ozaki-II improved fast-mode scaling, RN digits (``oz2_h ... :fast2``).
+
+    Kawakami & Takahashi's rescaling: equilibrate every row by its own
+    power of two ``rho_i = 2^ceil(log2 rowmax_i)``, then run the constant
+    scaling of :func:`split_oz2` on the equilibrated matrix — whose
+    shared grid is the CONSTANT ``mu = 2^(1-beta)``, i.e.
+    ``gbase = 2``.  Since the equilibration is exact, the digits are
+    bitwise identical to :func:`split_rn_const`'s (no extra pass); the
+    Split carries the per-row ``base`` (``rho_i * gbase``) so the ladder
+    consumer can apply the exact two-sided unscale after accumulation.
+    The truncation error is anchored per row — near-full-mode accuracy
+    at fast-mode cost.  Batched / ``rowmax_reduce`` like
+    :func:`split_rn_const` (one reduction; shards agree on every row's
+    grid, hence on the constant equilibrated grid).
+    """
+    return _with_fast2_gbase(split_rn_const(a, k, beta=beta, axis=axis,
+                                            rowmax_reduce=rowmax_reduce))
+
+
+def split_oz2_bitmask_fast2(a: jax.Array, k: int, *,
+                            beta: Optional[int] = None, axis: int = 0,
+                            rowmax_reduce: Optional[Callable] = None
+                            ) -> Split:
+    """Improved fast-mode scaling, truncation digits (``oz2_b ... :fast2``).
+
+    The truncation analogue of :func:`split_oz2_fast2`: equilibration by
+    ``rho_i = 2^floor(log2 rowmax_i)`` gives the equilibrated constant
+    base ``2 * 2^floor(log2 rowmax_hat)`` = ``gbase = 2``; digits are
+    bitwise :func:`split_bitmask`'s.
+    """
+    return _with_fast2_gbase(split_bitmask(a, k, beta=beta, axis=axis,
+                                           rowmax_reduce=rowmax_reduce))
 
 
 def reconstruct(split: Split, dtype=None) -> jax.Array:

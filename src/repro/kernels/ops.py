@@ -54,7 +54,8 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
                 axis: int = 0,
                 rowmax_reduce: Optional[Callable] = None) -> Split:
     """Pallas-accelerated splitting (Alg. 3 'bitmask' / Alg. 8 'rn_const' /
-    the oz2 constant-grid modes 'oz2_bitmask' / 'oz2_rn').
+    the oz2 constant-grid modes 'oz2_bitmask' / 'oz2_rn' / their
+    improved-scaling fast2 twins 'oz2_bitmask_fast2' / 'oz2_rn_fast2').
 
     Returns the same :class:`Split` contract as the pure-jnp splitters —
     bit-identical digits and scales, in ``a``'s own dtype (f64 inputs stay
@@ -69,7 +70,11 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
     maximum; without batch dims the kernel runs in its const-grid mode
     (a (1, 1) scalar operand instead of an (m, 1) streamed vector), with
     batch dims the scalar broadcasts onto the flattened row grid —
-    bit-identical either way.
+    bit-identical either way.  The fast2 modes keep the PER-ROW grids of
+    their per-row twins (the equilibrated digits are bitwise the per-row
+    splitter's — no global broadcast, no extra pass) and attach the
+    constant equilibrated-grid base ``gbase = 2`` exactly as
+    ``splitting.split_oz2_fast2`` / ``split_oz2_bitmask_fast2`` do.
     """
     if axis == 1:
         sp = split_fused(jnp.swapaxes(a, -1, -2), k, beta, mode=mode,
@@ -83,25 +88,32 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
     if mode in ("oz2_rn", "oz2_bitmask"):
         rowmax = jnp.broadcast_to(
             jnp.max(rowmax, axis=-1, keepdims=True), rowmax.shape)
-    if mode in ("bitmask", "oz2_bitmask"):
+    if mode in ("bitmask", "oz2_bitmask", "oz2_bitmask_fast2"):
         base = 2.0 * _pow2_floor(rowmax)
         invgrid = (2.0 ** beta) / base  # 1/grid_1, grid_1 = base*2^-beta
         kmode = "bitmask"
-    elif mode in ("rn_const", "oz2_rn"):
+    elif mode in ("rn_const", "oz2_rn", "oz2_rn_fast2"):
         mu = _pow2_ceil(rowmax) * (2.0 ** (1 - beta))
         base = mu * (2.0 ** beta)
         invgrid = 1.0 / mu
         kmode = "rn_const"
     else:
         raise ValueError(f"fused splitting supports bitmask/rn_const/"
-                         f"oz2_bitmask/oz2_rn, got {mode!r}")
+                         f"oz2_bitmask/oz2_rn/oz2_bitmask_fast2/"
+                         f"oz2_rn_fast2, got {mode!r}")
     if mode in ("oz2_rn", "oz2_bitmask"):
         gbase = base[..., 0]
+    elif mode in ("oz2_rn_fast2", "oz2_bitmask_fast2"):
+        # the equilibrated constant grid: per-row digits, scalar base 2
+        # (splitting._with_fast2_gbase's contract)
+        gbase = jnp.full(base.shape[:-1], 2.0, base.dtype)
     batch = a.shape[:-2]
     m, n = a.shape[-2:]
     rows = math.prod(batch, start=m)
     a2 = a.reshape((rows, n))
-    const_grid = gbase is not None and not batch
+    # fast2 keeps per-row grids (streamed), so only the plain oz2 modes
+    # qualify for the kernel's const-grid scalar operand
+    const_grid = mode in ("oz2_rn", "oz2_bitmask") and not batch
     inv2 = (invgrid[:1, None] if const_grid
             else invgrid.reshape((rows, 1)))
     bm_pref, bn_pref, _ = plan.kernel_blocks(rows, n)
@@ -252,6 +264,36 @@ def oz2_scale_accum_update(word: jax.Array, s: jax.Array, acc):
         hi, lo = oz2_scale_accum(word, s, acc.hi, acc.lo)
         return DF32(hi, lo)
     return oz2_scale_accum_plain(word, s, acc)
+
+
+def oz2_unscale(x: jax.Array, ra: jax.Array, rb: jax.Array) -> jax.Array:
+    """Fused fast2 post-ladder unscale: ``diag(ra) @ x @ diag(rb)`` per
+    batch element in one Pallas pass.  x ``(*batch, m, p)`` float;
+    ra ``(*batch, m)`` / rb ``(*batch, p)`` power-of-two equilibration
+    factors — exact, bit-identical to ``accumulate._oz2_unscale``."""
+    batch = x.shape[:-2]
+    m, p = x.shape[-2:]
+    B = math.prod(batch, start=1)
+    bm_pref, bp_pref, _ = plan.kernel_blocks(m, p)
+    bm = plan.tile(m, bm_pref, 8)
+    bp = plan.tile(p, bp_pref, 128)
+    x_p = _pad_to(x.reshape((B, m, p)), (1, bm, bp))
+    ra_p = _pad_to(ra.reshape((B, m, 1)).astype(x.dtype), (1, bm, 1))
+    rb_p = _pad_to(rb.reshape((B, 1, p)).astype(x.dtype), (1, 1, bp))
+    out = _sa.unscale(x_p, ra_p, rb_p, bm=bm, bp=bp, interpret=INTERPRET)
+    return out[:, :m, :p].reshape(batch + (m, p))
+
+
+def oz2_unscale_update(acc, ra: jax.Array, rb: jax.Array):
+    """``unscale_fn`` hook for ``accumulate.matmul_oz2`` (fast2): the
+    two-sided power-of-two unscale through the Pallas kernel — hi and lo
+    limbs separately for a df32 accumulator (a common exact scale
+    preserves the pair invariant)."""
+    from repro.core.accumulate import DF32  # local: avoid import cycle
+    if isinstance(acc, DF32):
+        return DF32(oz2_unscale(acc.hi, ra, rb),
+                    oz2_unscale(acc.lo, ra, rb))
+    return oz2_unscale(acc, ra, rb)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -32,6 +32,13 @@ converts exactly by the ladder's 52-bit word budget.  The operation
 sequences mirror ``accumulate._oz2_accum_df32`` / ``_oz2_accum_plain``
 bit for bit.
 
+:func:`unscale` is the fast2 (improved-scaling) epilogue: ONE pass
+applying the exact two-sided power-of-two unscale ``X * srow * scol``
+after the ladder — the same two multiplies, in the same order, as
+``accumulate._oz2_unscale``'s ``_outer_scale``, so it is bit-identical
+to the inline jnp epilogue (the multiplies are exact anyway: the fast2
+row/col factors are powers of two).
+
 All are batched: a leading grid axis maps batch elements, with per-batch
 scale vectors — the same layout convention as ``kernels.group_gemm``.
 """
@@ -106,6 +113,13 @@ def _scale_accum_const_plain_kernel(p_ref, s_ref, c_in_ref, c_ref):
     c_ref[...] = c + p_ref[...].astype(c.dtype) * s_ref[...]
 
 
+def _unscale_kernel(x_ref, srow_ref, scol_ref, out_ref):
+    """(1, bm, bp) tile: ``out = x * srow * scol`` — the fast2 two-sided
+    power-of-two unscale (both multiplies exact; the multiply order
+    matches ``accumulate._outer_scale`` for bit-identity)."""
+    out_ref[...] = x_ref[...] * srow_ref[...] * scol_ref[...]
+
+
 def _block_specs(bm: int, bp: int):
     return [
         pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j)),
@@ -177,6 +191,31 @@ def scale_accum_plain(p32: jax.Array, srow: jax.Array, scol: jax.Array,
         input_output_aliases={3: 0},
         interpret=interpret,
     )(p32, srow, scol, c)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))
+def unscale(x: jax.Array, srow: jax.Array, scol: jax.Array, *,
+            bm: int = DEFAULT_BM, bp: int = DEFAULT_BP,
+            interpret: bool = False):
+    """``x * srow * scol`` in ``x.dtype`` — the fast2 post-ladder
+    unscale.  x (B, m, p) float; srow (B, m, 1); scol (B, 1, p), both
+    power-of-two vectors (the fast2 equilibration factors), so the
+    result is exact.  The df32 caller runs it twice (hi and lo limbs:
+    a common power-of-two scale preserves the pair invariant)."""
+    B, m, p = x.shape
+    assert m % bm == 0 and p % bp == 0, (x.shape, bm, bp)
+    assert srow.shape == (B, m, 1) and scol.shape == (B, 1, p), \
+        (srow.shape, scol.shape)
+    grid = (B, m // bm, p // bp)
+    out_spec = pl.BlockSpec((1, bm, bp), lambda b, i, j: (b, i, j))
+    return pl.pallas_call(
+        _unscale_kernel,
+        grid=grid,
+        in_specs=_block_specs(bm, bp),
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, p), x.dtype),
+        interpret=interpret,
+    )(x, srow, scol)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bp", "interpret"))

@@ -19,6 +19,11 @@ vector is never materialized or streamed.  The extraction body is
 unchanged (the scalar broadcasts), hence bit-identical to the per-row
 kernel fed a constant vector.
 
+The fast2 (improved-scaling) oz2 modes need NO kernel of their own: their
+equilibrated digits are bitwise the per-row splitter's, so the wrapper
+(``repro.kernels.ops.split_fused``) routes them through the per-row grid
+path and only attaches the constant equilibrated base ``gbase = 2``.
+
 Layout: grid over (m/bm, n/bn) tiles; input tile (bm, bn) f32 in VMEM;
 output (k, bm, bn) int8 in VMEM.  bn is a multiple of 128 (lane width),
 bm a multiple of 8 (f32 sublanes).

@@ -436,9 +436,11 @@ def test_ozimmu_sharded_fused_pipeline_bitwise():
 def test_oz2_sharded_bitwise_both_modes():
     """Ozaki-II (constant scaling + exponent ladder): under the exact-int32
     reduction the sharded emulation — plain and fused — is bit-identical
-    to the single-device path for both oz2 variants, full and fast modes
-    (the global digit grid is agreed via one pmax; the int32 chunk
-    products are psum'd BEFORE the ladder fold)."""
+    to the single-device path for both oz2 variants, full, fast AND fast2
+    modes (the digit grid is agreed via one pmax — per-row for fast2 —
+    and the int32 chunk products are psum'd BEFORE the ladder fold; the
+    fast2 diag unscale is a pure-pow2 rescale of the reduced result, so
+    it cannot break the bitwise invariant)."""
     run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core import ozimmu
@@ -455,7 +457,7 @@ def test_oz2_sharded_bitwise_both_modes():
         dn = (((1,), (0,)), ((), ()))
         mesh = make_test_mesh(data=1, model=8)
         for name in ("oz2_b", "oz2_h"):
-            for fast in (False, True):
+            for fast in (False, True, "fast2"):
                 for pallas in (False, "fused"):
                     cfg = ozimmu.VARIANTS[name].with_(
                         k=6, accum_dtype="df32", fast=fast,
@@ -468,7 +470,44 @@ def test_oz2_sharded_bitwise_both_modes():
                         got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
                             a, b, dn, cfg.with_(mesh_axis="model")))(a, b)
                     assert bool(jnp.all(ref == got)), (name, fast, pallas)
-                print(name, "fast" if fast else "full", "sharded bitwise OK")
+                print(name, {False: "full", True: "fast"}.get(fast, "fast2"),
+                      "sharded bitwise OK")
+        print("OK")
+    """)
+
+
+def test_oz2_fast2_sharded_int32_bitwise():
+    """:fast2 composed with @mesh/int32 specifically (the acceptance
+    matrix cell): spec-driven configs, exact-int32 reduction, plain and
+    fused — bit-identical to the single-device XLA path."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(11)
+        def phi_mat(m, n, phi=2.0):
+            u = rng.uniform(0, 1, (m, n)); z = rng.standard_normal((m, n))
+            return (u - 0.5) * np.exp(phi * z)
+
+        a = jnp.asarray(phi_mat(48, 256), jnp.float32)
+        b = jnp.asarray(phi_mat(256, 64), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        for spec, sharded_spec in (
+                ("oz2_h-6:df32:fast2", "oz2_h-6:df32:fast2@model/int32"),
+                ("oz2_b-6:df32:fast2", "oz2_b-6:df32:fast2@model/int32"),
+                ("oz2_h-6:df32:fast2:fused",
+                 "oz2_h-6:df32:fast2:fused@model/int32")):
+            cfg = ozimmu.parse_spec(spec)
+            assert cfg.split.endswith("_fast2"), spec
+            ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
+            with set_mesh(mesh):
+                got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                    a, b, dn, ozimmu.parse_spec(sharded_spec)))(a, b)
+            assert bool(jnp.all(ref == got)), spec
+            print(spec, "sharded int32 bitwise OK")
         print("OK")
     """)
 
@@ -491,14 +530,15 @@ def test_presplit_sharded_bitwise_all_variants():
         dn = (((1,), (0,)), ((), ()))
         mesh = make_test_mesh(data=1, model=8)
         cache = split_cache.SplitCache()
+        FAST = {"oz2_h": True, "oz2_b": "fast2"}   # cover :fast AND :fast2
         for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
                      "oz2_b", "oz2_h"):
             for pallas in (False, "fused"):
                 if pallas == "fused" and name == "ozimmu_rn":
                     continue  # adaptive RN has no fused splitter
-                cfg = ozimmu.VARIANTS[name].with_(
+                cfg = ozimmu.canonical_fast2(ozimmu.VARIANTS[name].with_(
                     k=5, accum_dtype="df32", use_pallas=pallas,
-                    fast=(name == "oz2_h"))
+                    fast=FAST.get(name, False)))
                 ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
                 with set_mesh(mesh):
                     mcfg = cfg.with_(mesh_axis="model")

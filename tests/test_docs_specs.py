@@ -27,6 +27,9 @@ IGNORE = {
     "oz2_num_pairs", "oz2_num_highprec_adds", "oz2_num_chunks",
     "matmul_oz2", "split_oz2", "split_oz2_bitmask", "oz2_rn", "oz2_bitmask",
     "oz2_scale_accum_update",
+    "split_oz2_fast2", "split_oz2_bitmask_fast2", "oz2_rn_fast2",
+    "oz2_bitmask_fast2", "oz2_unscale", "oz2_unscale_update", "oz2_h_fast2",
+    "oz2_h_fast",
 }
 # a candidate spec: spec charset only, no brackets/dots/parens (those mark
 # grammar templates like `ozimmu[-k]` or code references).  k is digits or
@@ -64,7 +67,7 @@ def test_docs_quote_enough_specs():
     specs = {s for _, s in SPECS}
     assert {"ozimmu_h-8", "ozimmu_h-8:df32@model",
             "ozimmu_h-auto:df32:fused", "oz2_h-auto:fast",
-            "oz2_b-8:df32@model"} <= specs, specs
+            "oz2_h-auto:fast2", "oz2_b-8:df32@model"} <= specs, specs
     assert len(specs) >= 8, specs
 
 
@@ -77,3 +80,41 @@ def test_doc_spec_parses(rel, spec):
 def test_native_specs_parse():
     for spec in ("bf16", "f32", "f64"):
         make_engine(spec)
+
+
+# ---------------------------------------------------------------------------
+# grammar regressions: the fast-mode tokens
+# ---------------------------------------------------------------------------
+
+def test_fast_tokens_rejected_outside_oz2():
+    """`:fast`/`:fast2` are oz2-family tokens; elsewhere parse_spec names
+    the offending token in the ValueError (not a generic parse failure)."""
+    for tok, spec in (("fast", "ozimmu_h-8:fast"),
+                      ("fast2", "ozimmu_h-8:fast2"),
+                      ("fast", "ozimmu_ef-8:df32:fast"),
+                      ("fast2", "ozimmu-8:fast2:fused")):
+        with pytest.raises(ValueError, match=f"'{tok}'"):
+            make_engine(spec)
+
+
+def test_conflicting_fast_tokens_rejected():
+    """`:fast` and `:fast2` are mutually exclusive; duplicates and
+    conflicts are rejected with the token named either way round."""
+    with pytest.raises(ValueError, match="conflicting fast-mode"):
+        make_engine("oz2_h-8:fast:fast2")
+    with pytest.raises(ValueError, match="conflicting fast-mode"):
+        make_engine("oz2_h-8:fast2:fast")
+    with pytest.raises(ValueError, match="duplicate 'fast2'"):
+        make_engine("oz2_h-8:fast2:fast2")
+    with pytest.raises(ValueError, match="duplicate 'fast'"):
+        make_engine("oz2_h-8:fast:fast")
+
+
+def test_fast2_spec_round_trips():
+    """The canonical :fast2 specs build engines whose configs carry the
+    fast2 split strategy (the grammar row documented in docs/engine.md)."""
+    from repro.core.ozimmu import parse_spec
+    assert parse_spec("oz2_h-8:fast2").split == "oz2_rn_fast2"
+    assert parse_spec("oz2_b-auto:fast2:df32").split == "oz2_bitmask_fast2"
+    make_engine("oz2_h-auto:fast2")
+    make_engine("oz2_h-8:fast2:fused@model/int32")

@@ -39,6 +39,21 @@ def test_fused_bit_identical_all_variants(rng, variant, accum):
     np.testing.assert_array_equal(c_fused, c_ref)
 
 
+@pytest.mark.parametrize("variant", ["oz2_b", "oz2_h"])
+@pytest.mark.parametrize("fast", [True, "fast2"])
+@pytest.mark.parametrize("accum", ["f64", "f32", "df32"])
+def test_fused_bit_identical_oz2_fast_modes(rng, variant, fast, accum):
+    """The oz2 fast-mode band selections — :fast and the improved-scaling
+    :fast2 (whose post-ladder diag unscale runs as a Pallas epilogue when
+    fused) — stay bit-identical to the XLA path on odd shapes."""
+    a = jnp.asarray(make_phi_matrix(rng, 33, 130, phi=2.0))
+    b = jnp.asarray(make_phi_matrix(rng, 130, 17, phi=2.0))
+    cfg = VARIANTS[variant].with_(k=6, accum_dtype=accum, fast=fast)
+    c_ref = np.asarray(ozimmu_matmul(a, b, cfg))
+    c_fused = np.asarray(ozimmu_matmul(a, b, cfg.with_(use_pallas="fused")))
+    np.testing.assert_array_equal(c_fused, c_ref)
+
+
 def test_fused_bit_identical_f32_inputs(rng):
     a = jnp.asarray(make_phi_matrix(rng, 48, 160, dtype=np.float32))
     b = jnp.asarray(make_phi_matrix(rng, 160, 40, dtype=np.float32))

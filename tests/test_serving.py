@@ -51,7 +51,8 @@ SPECS = [
                     "oz2_b", "oz2_h")
     for dt in ("", ":df32", ":f32")
     for fused in ("", ":fused")
-] + ["oz2_h-4:fast", "oz2_b-4:df32:fast", "oz2_h-4:fast:fused"]
+] + ["oz2_h-4:fast", "oz2_b-4:df32:fast", "oz2_h-4:fast:fused",
+     "oz2_h-4:fast2", "oz2_b-4:df32:fast2", "oz2_h-4:fast2:fused"]
 
 
 @pytest.mark.parametrize("spec", SPECS)
@@ -80,7 +81,7 @@ def test_presplit_bitwise_batched_dnums():
     a = jnp.asarray(rng.standard_normal((3, 5, 64)))
     b = jnp.asarray(rng.standard_normal((3, 64, 7)))
     dn = (((2,), (1,)), ((0,), (0,)))
-    for spec in ("ozimmu_h-5:df32", "oz2_h-5:fast"):
+    for spec in ("ozimmu_h-5:df32", "oz2_h-5:fast", "oz2_h-5:fast2"):
         cfg = ozimmu.parse_spec(spec)
         sp = split_cache.SplitCache().get(b, dn, cfg)
         ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
@@ -93,7 +94,8 @@ def test_presplit_auto_k_matches_jitted_plan(operands):
     jitted (traced) call resolves — so cached and uncached jitted paths
     agree bitwise."""
     a, b = operands
-    for spec in ("ozimmu_h-auto:df32", "oz2_h-auto:fast"):
+    for spec in ("ozimmu_h-auto:df32", "oz2_h-auto:fast",
+                 "oz2_h-auto:fast2"):
         cfg = ozimmu.parse_spec(spec)
         sp = split_cache.SplitCache().get(b, DN, cfg)
         assert sp.digits.shape[0] == split_cache.resolved_k(
@@ -106,11 +108,14 @@ def test_presplit_auto_k_matches_jitted_plan(operands):
         np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
-def test_presplit_grad_matches(operands):
+@pytest.mark.parametrize("spec", ["ozimmu_h-4:df32", "oz2_h-4:fast2",
+                                  "oz2_b-4:df32:fast2"])
+def test_presplit_grad_matches(spec, operands):
     """Gradients flow through the presplit forward unchanged (cotangent
-    contractions never use the frozen split)."""
+    contractions never use the frozen split) — including the fast2
+    splits, whose base/gbase ride the VJP residual pytree."""
     a, b = operands
-    cfg = ozimmu.parse_spec("ozimmu_h-4:df32")
+    cfg = ozimmu.parse_spec(spec)
     sp = split_cache.SplitCache().get(b, DN, cfg)
     g_ref = jax.grad(
         lambda a, b: ozimmu.ozimmu_dot_general(a, b, DN, cfg).sum(),
@@ -222,11 +227,17 @@ def test_cache_keying(operands):
     assert cache.stats.misses == 2
     cache.get(b, DN, ozimmu.parse_spec("oz2_h-4"))
     assert cache.stats.misses == 3
+    # fast2 is a DIFFERENT split strategy (oz2_rn_fast2): its own entry,
+    # and hitting it again is a hit
+    cache.get(b, DN, ozimmu.parse_spec("oz2_h-4:fast2"))
+    assert cache.stats.misses == 4
+    cache.get(b, DN, ozimmu.parse_spec("oz2_h-4:fast2"))
+    assert (cache.stats.hits, cache.stats.misses) == (2, 4)
     # "updated" weights (a new array) => miss
     b2 = b + 0.0
     cache.get(b2, DN, h)
-    assert cache.stats.misses == 4
-    assert len(cache) == 4
+    assert cache.stats.misses == 5
+    assert len(cache) == 5
 
 
 def test_cache_weakref_invalidation(operands):

@@ -10,20 +10,25 @@ given, settings, st = hypothesis_or_stubs()
 
 from repro.core import (compute_beta, compute_r, split_bitmask, split_rn,
                         split_rn_const, split_oz2, split_oz2_bitmask,
+                        split_oz2_fast2, split_oz2_bitmask_fast2,
                         reconstruct, residual)
 from tests.conftest import make_phi_matrix
 
 SPLITTERS = {"bitmask": split_bitmask, "rn": split_rn, "rn_const": split_rn_const}
 OZ2_SPLITTERS = {"oz2_rn": split_oz2, "oz2_bitmask": split_oz2_bitmask}
-ALL_SPLITTERS = {**SPLITTERS, **OZ2_SPLITTERS}
+FAST2_SPLITTERS = {"oz2_rn_fast2": split_oz2_fast2,
+                   "oz2_bitmask_fast2": split_oz2_bitmask_fast2}
+ALL_SPLITTERS = {**SPLITTERS, **OZ2_SPLITTERS, **FAST2_SPLITTERS}
 # digit magnitude budget per splitter: truncation spans the full
 # +-(2^beta - 1) range, round-to-nearest half of it
 DIGIT_LIMIT = {
     "bitmask": lambda beta: 2 ** beta - 1,
     "oz2_bitmask": lambda beta: 2 ** beta - 1,
+    "oz2_bitmask_fast2": lambda beta: 2 ** beta - 1,
     "rn": lambda beta: 2 ** (beta - 1),
     "rn_const": lambda beta: 2 ** (beta - 1),
     "oz2_rn": lambda beta: 2 ** (beta - 1),
+    "oz2_rn_fast2": lambda beta: 2 ** (beta - 1),
 }
 
 
@@ -254,6 +259,109 @@ def _sequential_reconstruct(s) -> np.ndarray:
     return rec
 
 
+# ---------------------------------------------------------------------------
+# fast2 (improved-scaling) oz2 splits — per-row pow2 equilibration onto a
+# constant shared grid (spec token :fast2)
+# ---------------------------------------------------------------------------
+
+PER_ROW_OF = {"oz2_rn_fast2": split_rn_const, "oz2_bitmask_fast2": split_bitmask}
+
+
+@pytest.mark.parametrize("name", list(FAST2_SPLITTERS))
+@pytest.mark.parametrize("axis", [0, 1])
+def test_fast2_digits_bitwise_equal_per_row_splitter(rng, name, axis):
+    """The equilibration a_hat = a / rho_i is an EXACT power-of-two rescale,
+    so fast2 digits are bitwise the per-row splitter's — the constant grid
+    costs nothing in digit quality (Kawakami-Takahashi improved scaling)."""
+    a = jnp.asarray(make_phi_matrix(rng, 24, 48, phi=3.0))
+    s2 = FAST2_SPLITTERS[name](a, 7, axis=axis)
+    sp = PER_ROW_OF[name](a, 7, axis=axis)
+    np.testing.assert_array_equal(np.asarray(s2.digits), np.asarray(sp.digits))
+    np.testing.assert_array_equal(np.asarray(s2.scale), np.asarray(sp.scale))
+    np.testing.assert_array_equal(np.asarray(s2.base), np.asarray(sp.base))
+
+
+@pytest.mark.parametrize("name", list(FAST2_SPLITTERS))
+def test_fast2_grid_structure(rng, name):
+    """fast2 structure: scalar gbase == 2 (the equilibrated shared base),
+    per-row base a power of two, and the unscale ratio base/gbase an exact
+    power of two (so the post-ladder diag rescale commutes bitwise)."""
+    a = jnp.asarray(make_phi_matrix(rng, 16, 64, phi=2.0))
+    s = FAST2_SPLITTERS[name](a, 6)
+    assert s.gbase is not None and np.asarray(s.gbase).shape == ()
+    assert float(np.asarray(s.gbase)) == 2.0
+    base = np.asarray(s.base)
+    mant, _ = np.frexp(base[base != 0])
+    assert np.all(mant == 0.5)                       # pow2 base
+    ratio = base / np.asarray(s.gbase)
+    mant, _ = np.frexp(ratio[ratio != 0])
+    assert np.all(mant == 0.5)                       # pow2 unscale ratio
+    # geometric ladder per row, like the shared-grid splits
+    sc = np.asarray(s.scale)
+    for i in range(6):
+        np.testing.assert_array_equal(sc[i], base * 2.0 ** (-s.beta * (i + 1)))
+    # batch: one gbase per batch element, still the constant 2
+    ab = jnp.asarray(rng.standard_normal((3, 5, 16)))
+    sb = FAST2_SPLITTERS[name](ab, 4)
+    assert np.asarray(sb.gbase).shape == (3,)
+    assert np.all(np.asarray(sb.gbase) == 2.0)
+
+
+@pytest.mark.parametrize("name", list(FAST2_SPLITTERS))
+def test_fast2_rowmax_reduce_grid_agreement(rng, name):
+    """Mesh-agreeability: contraction shards see only a column slice of A,
+    but the ``rowmax_reduce`` hook (a pmax over shards) hands every shard
+    the SAME per-row maxima — so shard grids, bases and digits match the
+    unsharded split exactly (the property @mesh/int32 relies on)."""
+    a = np.asarray(make_phi_matrix(rng, 12, 64, phi=2.0))
+    aj = jnp.asarray(a)
+    full = FAST2_SPLITTERS[name](aj, 6)
+    shards = [aj[:, :32], aj[:, 32:]]
+    # simulated pmax: the true cross-shard reduction of the per-row maxima
+    global_rowmax = jnp.max(jnp.abs(aj), axis=1)
+    reduce_fn = lambda local: jnp.maximum(local, global_rowmax)
+    for i, sh in enumerate(shards):
+        s = FAST2_SPLITTERS[name](sh, 6, rowmax_reduce=reduce_fn)
+        np.testing.assert_array_equal(np.asarray(s.base), np.asarray(full.base))
+        np.testing.assert_array_equal(np.asarray(s.gbase),
+                                      np.asarray(full.gbase))
+        np.testing.assert_array_equal(np.asarray(s.scale),
+                                      np.asarray(full.scale))
+        np.testing.assert_array_equal(
+            np.asarray(s.digits), np.asarray(full.digits)[:, :, 32 * i:32 * (i + 1)])
+
+
+def test_fast2_worked_example_micro_case():
+    """Pinned worked example of the improved scaling (Kawakami & Takahashi
+    style): a 2x2 matrix with exactly-representable grid values, checked
+    against hand-computed digits, bases and unscale ratios.
+
+    n=2 => beta=7.  Row 0 = [1.5, 0.25]: rowmax 1.5, 2^ceil = 2, base = 4,
+    mu = 4*2^-7 = 1/32, RN digits round(a*32) = [48, 8] (exact, so slices
+    2.. are zero).  Row 1 = [-0.375, 0.5]: base = 1, mu = 1/128, digits
+    [-48, 64].  Equilibrated base gbase = 2; unscale ratios base/gbase =
+    [2, 0.5]."""
+    a = jnp.asarray(np.array([[1.5, 0.25], [-0.375, 0.5]]))
+    s = split_oz2_fast2(a, 3)
+    assert s.beta == 7
+    np.testing.assert_array_equal(np.asarray(s.base), [4.0, 1.0])
+    assert float(np.asarray(s.gbase)) == 2.0
+    np.testing.assert_array_equal(np.asarray(s.base) / np.asarray(s.gbase),
+                                  [2.0, 0.5])
+    d = np.asarray(s.digits, np.int32)
+    np.testing.assert_array_equal(d[0], [[48, 8], [-48, 64]])
+    np.testing.assert_array_equal(d[1:], 0)
+    np.testing.assert_array_equal(np.asarray(reconstruct(s)), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(residual(s, a)), 0.0)
+    # bitmask flavour: base = 2*2^floor, truncation digits
+    sb = split_oz2_bitmask_fast2(a, 3)
+    np.testing.assert_array_equal(np.asarray(sb.base), [2.0, 1.0])
+    assert float(np.asarray(sb.gbase)) == 2.0
+    db = np.asarray(sb.digits, np.int32)
+    np.testing.assert_array_equal(db[0], [[96, 16], [-48, 64]])
+    np.testing.assert_array_equal(np.asarray(reconstruct(sb)), np.asarray(a))
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     m=st.integers(1, 10), n=st.integers(1, 32), k=st.integers(1, 9),
@@ -295,10 +403,13 @@ def test_property_eft_invariants_all_splitters(m, n, k, nb, axis, dtype,
         rec = _sequential_reconstruct(s)
         res = a.astype(wide) - rec
         assert np.array_equal(rec + res, a.astype(wide)), name
-        # and the residual is the scheme's V_k: below the last grid
+        # and the residual is the scheme's V_k: below the last grid.
+        # The fast2 splits are NOT widened to the global anchor — their
+        # per-row equilibrated grid must satisfy the same tight per-row
+        # contract as the per-row splitters (the whole point of fast2).
         limit = 2.0 ** (-s.beta * k + 2)
         anchor = np.max(np.abs(a), axis=-1 if axis == 0 else -2,
                         keepdims=True).astype(wide)
-        if name.startswith("oz2"):
+        if name.startswith("oz2") and not name.endswith("_fast2"):
             anchor = np.max(anchor, axis=(-1, -2), keepdims=True)
         assert np.all(np.abs(res) <= anchor * limit + 1e-300), name
