@@ -18,6 +18,7 @@ from benchmarks.exact import dd_matmul, max_relative_error
 from repro.core import ozimmu
 
 VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+            "ozimmu_sm_b", "ozimmu_sm_h",
             "oz2_b", "oz2_h", "oz2_h_fast", "oz2_h_fast2")
 
 

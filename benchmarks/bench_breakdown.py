@@ -23,16 +23,16 @@ from benchmarks.model_v5e import phase_times, variant_split
 from repro.core import ozimmu
 from repro.core.accumulate import (num_highprec_adds, oz2_num_highprec_adds,
                                    oz2_num_pairs)
-from repro.core.splitting import compute_beta, compute_r, digit_bits
+from repro.core.splitting import beta_for, compute_r, digit_bits
 
-VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h", "ozimmu_sm_h",
             "oz2_h", "oz2_h_fast", "oz2_h_fast2")
 
 
 def _counts(variant: str, n: int, k: int):
     """(int8_gemms, hp_adds) — the Plan cost accounting per variant, at
     the bench's paper-faithful f64 accumulator (52-bit ladder words)."""
-    beta = compute_beta(n)
+    beta = beta_for(variant_split(variant), n)
     if variant.startswith("oz2"):
         fast = variant.endswith("_fast") or variant.endswith("_fast2")
         dbits = digit_bits(variant_split(variant), beta)
@@ -40,7 +40,7 @@ def _counts(variant: str, n: int, k: int):
         return (oz2_num_pairs(k, fast),
                 oz2_num_highprec_adds(k, r, beta, n, fast, dbits,
                                       word_bits=52))
-    group_ef = variant in ("ozimmu_ef", "ozimmu_h")
+    group_ef = variant in ("ozimmu_ef", "ozimmu_h", "ozimmu_sm_h")
     return (k * (k + 1) // 2,
             num_highprec_adds(k, compute_r(n, beta), group_ef))
 
@@ -91,8 +91,8 @@ def main(out_json=None, quick=False):
     base = {r["k"]: r for r in rows if r["variant"] == "ozimmu"}
     h = {r["k"]: r for r in rows if r["variant"] == "ozimmu_h"}
     for r in rows:
-        if r["variant"] in ("ozimmu_ef", "ozimmu_h", "oz2_h", "oz2_h_fast",
-                            "oz2_h_fast2"):
+        if r["variant"] in ("ozimmu_ef", "ozimmu_h", "ozimmu_sm_h", "oz2_h",
+                            "oz2_h_fast", "oz2_h_fast2"):
             sp = base[r["k"]]["total_ms"] / r["total_ms"]
             r["speedup_vs_ozimmu"] = sp
     checks = {

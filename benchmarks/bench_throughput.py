@@ -11,7 +11,7 @@ import json
 
 from benchmarks.model_v5e import emulated_tflops
 
-VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+VARIANTS = ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h", "ozimmu_sm_h",
             "oz2_h_fast", "oz2_h_fast2")
 
 

@@ -19,7 +19,7 @@ import dataclasses
 
 from repro.core.accumulate import (num_highprec_adds, oz2_num_chunks,
                                    oz2_num_highprec_adds, oz2_num_pairs)
-from repro.core.splitting import compute_beta, compute_r, digit_bits
+from repro.core.splitting import beta_for, compute_r, digit_bits
 
 
 def variant_split(variant: str) -> str:
@@ -74,13 +74,14 @@ def phase_times(m: int, n: int, p: int, k: int, *, variant: str,
     in VMEM (kernels/scale_accum.py); False models a materialized scaled
     term per high-precision add (an extra write+read of the term).
     """
-    beta = compute_beta(n)
+    split = variant_split(variant)
+    beta = beta_for(split, n)     # sm slices are 8-bit, signed ones <= 7
     oz2 = variant.startswith("oz2")
     oz2_fast2 = variant.endswith("_fast2")
     oz2_fast = oz2_fast2 or variant.endswith("_fast")
-    dbits = digit_bits(variant_split(variant), beta)
+    dbits = digit_bits(split, beta)
     r = compute_r(n, beta, dbits) if oz2 else compute_r(n, beta)
-    group_ef = variant in ("ozimmu_ef", "ozimmu_h")
+    group_ef = variant in ("ozimmu_ef", "ozimmu_h", "ozimmu_sm_h")
     hp_b = _BYTES_HP[accum_dtype]
 
     # --- split: read A (m*n) and B (n*p) in input precision, write k int8

@@ -1,6 +1,7 @@
 """Core: the paper's contribution — Ozaki-scheme GEMM emulation on int8 MMUs."""
-from repro.core.splitting import (Split, compute_beta, compute_r,
-                                  split_bitmask, split_rn, split_rn_const,
+from repro.core.splitting import (Split, compute_beta, compute_beta_sm,
+                                  compute_r, split_bitmask, split_rn,
+                                  split_rn_const, split_sm, sm_decode,
                                   split_oz2, split_oz2_bitmask,
                                   split_oz2_fast2, split_oz2_bitmask_fast2,
                                   reconstruct, residual)

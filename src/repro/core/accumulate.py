@@ -68,10 +68,11 @@ from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.splitting import Split, compute_r
+from repro.core.splitting import Split, compute_r, sm_decode_slice
 
 __all__ = [
     "int8_gemm",
+    "gemm_slice",
     "matmul_naive",
     "matmul_group_ef",
     "matmul_oz2",
@@ -95,6 +96,19 @@ def int8_gemm(a8: jax.Array, b8: jax.Array) -> jax.Array:
     dims = (((a8.ndim - 1,), (nb,)), (tuple(range(nb)), tuple(range(nb))))
     return jax.lax.dot_general(a8, b8, dims,
                                preferred_element_type=jnp.int32)
+
+
+def gemm_slice(sp: Split, i: int) -> jax.Array:
+    """Slice ``i`` (0-indexed) of a split, widened for the integer GEMM.
+
+    Signed-digit splits feed the int8 array straight through; the
+    sign-magnitude storage convention (``Split.signmag``) widens to int16
+    values first (slice 0 signed, the rest un-wrapped to [0, 2^beta - 1])
+    — ``int8_gemm``'s int32 contraction is dtype-generic, and the
+    no-overflow bound of ``compute_beta_sm`` covers the wider digits.
+    """
+    d = sp.digits[i]
+    return sm_decode_slice(d, i) if sp.signmag else d
 
 
 # ---------------------------------------------------------------------------
@@ -239,7 +253,7 @@ def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
     out_dtype = out_dtype or sa.scale.dtype
     pairs = _term_pairs(k)
     gemm = pair_gemm_fn or (
-        lambda s, t: int8_gemm(sa.digits[s - 1], sb.digits[t - 1]))
+        lambda s, t: int8_gemm(gemm_slice(sa, s - 1), gemm_slice(sb, t - 1)))
     prods = _reduce_products([gemm(s, t) for s, t in pairs], product_reduce)
 
     if accum == "df32":
@@ -274,9 +288,12 @@ def _group_chunks(k: int, r: int):
 def group_gemm_concat(sa: Split, sb: Split, pairs) -> jax.Array:
     """sum_{(s,t) in pairs} A_s @ B_t as ONE int8 GEMM via contraction-axis
     concatenation — the TPU-native realization of Alg. 6's INT32 group sum.
-    Batched digits concatenate along the trailing contraction axis."""
-    a_cat = jnp.concatenate([sa.digits[s - 1] for s, _ in pairs], axis=-1)
-    b_cat = jnp.concatenate([sb.digits[t - 1] for _, t in pairs], axis=-2)
+    Batched digits concatenate along the trailing contraction axis.
+    Sign-magnitude splits widen per slice first (``gemm_slice``)."""
+    a_cat = jnp.concatenate([gemm_slice(sa, s - 1) for s, _ in pairs],
+                            axis=-1)
+    b_cat = jnp.concatenate([gemm_slice(sb, t - 1) for _, t in pairs],
+                            axis=-2)
     return int8_gemm(a_cat, b_cat)
 
 

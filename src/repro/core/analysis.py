@@ -10,7 +10,7 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.splitting import compute_beta, compute_r
+from repro.core.splitting import compute_beta, compute_beta_sm, compute_r
 
 __all__ = [
     "unit_roundoff",
@@ -19,6 +19,7 @@ __all__ = [
     "error_bound_ozimmu",
     "error_bound_group_ef",
     "error_bound_rn",
+    "error_bound_sm",
     "error_bound_oz2",
     "flop_counts",
 ]
@@ -88,6 +89,35 @@ def error_bound_rn(a: np.ndarray, b: np.ndarray, k: int,
     n = a.shape[1]
     beta = compute_beta(n)
     tb = 4.0 * (k + 1) * n * 2.0 ** (-beta * k) * (2.0 * _gf(a, b))
+    return tb + (k * (k + 1) / 2) * u * (np.abs(a) @ np.abs(b))
+
+
+def error_bound_sm(a: np.ndarray, b: np.ndarray, k: int,
+                   u: float | None = None) -> np.ndarray:
+    """Documented bound for the sign-magnitude variants (ozimmu_sm_b/_h).
+
+    The splitter anchors each row at ``anchor_i = 2 ufp(rowmax_i)`` (so
+    the normalized value is strictly inside (-1, 1)) and extracts k
+    digits of ``beta_sm = min(8, ...)`` bits, the leading one carrying
+    the sign; the elementwise residual after k digits satisfies
+    ``|V_A| <= anchor_i 2^(1 - beta k) = 4 g_i 2^(-beta k)`` — exactly
+    2x the bitmask residual at equal beta (floor truncation against the
+    doubled anchor), so eq. (18)'s band/truncation bound holds with the
+    constant doubled:
+
+        |AB - T_k| <= 8(k+1) n 2^(-beta_sm k) g f^T
+                      + (k(k+1)/2) u |A||B|.
+
+    The naive accumulation term (ozimmu_sm_b) dominates the group-EF one
+    (ozimmu_sm_h, w - 1 adds), so one bound covers both — mirroring
+    :func:`error_bound_rn`.  At beta_sm = 8 the truncation term is
+    ~2^(k-1) times SMALLER than the beta-7 bound at equal k: the
+    (k-1)-bit saving the planner turns into a smaller k.
+    """
+    u = u if u is not None else unit_roundoff(a.dtype)
+    n = a.shape[1]
+    beta = compute_beta_sm(n)
+    tb = 8.0 * (k + 1) * n * 2.0 ** (-beta * k) * _gf(a, b)
     return tb + (k * (k + 1) / 2) * u * (np.abs(a) @ np.abs(b))
 
 

@@ -10,6 +10,13 @@ Specs (CLI flag ``--matmul_engine``):
     picks the smallest slice count meeting ``OzimmuConfig.target_eps``
     from the operands' probed exponent ranges (eager calls) or the
     static mantissa-coverage plan (inside jit).
+  * ``ozimmu_sm_b[-k]``, ``ozimmu_sm_h[-k]`` — sign-magnitude slicing:
+    unsigned magnitude digits with the sign folded into the leading
+    slice, so trailing slices spend no sign bit and the grid widens to
+    a full 8 bits (``splitting.compute_beta_sm``).  At equal target_eps
+    the planner resolves a strictly smaller k (fewer int8 GEMMs) than
+    ``ozimmu_h``; composes with ``:fused``/``@mesh``/presplit weights
+    bit-identically — docs/algorithms.md#the-sign-magnitude-family-ozimmu_sm_.
   * ``oz2_b[-k]``, ``oz2_h[-k]`` optionally ``:fast`` or ``:fast2`` —
     Ozaki-II constant-scaling emulation: one shared digit grid per
     matrix, all slice-pair scales folded into a scalar exponent ladder
@@ -129,10 +136,11 @@ class PresplitWeight:
         if not cfg.auto_k and self.k != cfg.k:
             return None
         n = self.array.shape[0]
-        if self.beta != splitting.compute_beta(n):
+        if self.beta != splitting.beta_for(self.split, n):
             return None
         return splitting.Split(self.digits, self.scale, self.base,
-                               self.beta, 1, gbase=self.gbase)
+                               self.beta, 1, gbase=self.gbase,
+                               signmag=splitting.is_signmag(self.split))
 
 
 jax.tree_util.register_pytree_node(

@@ -3,16 +3,29 @@
 The four named method variants of the paper, plus the two Ozaki-II
 constant-scaling variants (see docs/algorithms.md#ozaki-scheme-ii):
 
-  =============  ================  =====================  ====================
-  name           splitting         accumulation           paper
-  =============  ================  =====================  ====================
-  ``ozimmu``     bitmask (Alg3)    naive (Alg4)           Ootomo et al. (base)
-  ``ozimmu_rn``  RN adapt (Alg5)   naive (Alg4)           proposed §3.1
-  ``ozimmu_ef``  bitmask (Alg3)    group-EF (Alg6/7)      proposed §3.2
-  ``ozimmu_h``   RN const (Alg8)   group-EF (Alg6/7)      proposed §3.3
-  ``oz2_b``      oz2 trunc (const) exponent ladder        OS-II (Uchino et al.)
-  ``oz2_h``      oz2 RN (const)    exponent ladder        OS-II fast-mode line
-  =============  ================  =====================  ====================
+  ===============  ================  =====================  ====================
+  name             splitting         accumulation           paper
+  ===============  ================  =====================  ====================
+  ``ozimmu``       bitmask (Alg3)    naive (Alg4)           Ootomo et al. (base)
+  ``ozimmu_rn``    RN adapt (Alg5)   naive (Alg4)           proposed §3.1
+  ``ozimmu_ef``    bitmask (Alg3)    group-EF (Alg6/7)      proposed §3.2
+  ``ozimmu_h``     RN const (Alg8)   group-EF (Alg6/7)      proposed §3.3
+  ``ozimmu_sm_b``  sign-magnitude    naive (Alg4)           cuBLASDx DGEMM-emu
+  ``ozimmu_sm_h``  sign-magnitude    group-EF (Alg6/7)      cuBLASDx DGEMM-emu
+  ``oz2_b``        oz2 trunc (const) exponent ladder        OS-II (Uchino et al.)
+  ``oz2_h``        oz2 RN (const)    exponent ladder        OS-II fast-mode line
+  ===============  ================  =====================  ====================
+
+The sign-magnitude variants slice into UNSIGNED beta-bit magnitudes with
+the sign carried only by the leading slice (``splitting.split_sm``):
+no bit is reserved per digit for a sign, so beta reaches 8 and k slices
+cover 8k-1 mantissa bits versus the signed splitters' 7k — the planner's
+``auto`` picks a strictly smaller k (fewer int8 GEMMs, fewer
+high-precision adds) at equal ``target_eps``.  Digit storage is int8 mod
+2^8; accumulation widens through ``splitting.sm_decode`` (the
+``accumulate.gemm_slice`` hook), and all scale folds stay pow2-exact, so
+``:fused``, ``@mesh/int32`` and ``rhs_presplit`` remain bitwise
+identical to the XLA path.
 
 The oz2 variants share ONE power-of-two digit grid per matrix (constant
 scaling), so all slice-pair scales collapse to a scalar exponent ladder:
@@ -119,6 +132,8 @@ VARIANTS = {
     "ozimmu_rn": OzimmuConfig(split="rn", accumulate="naive"),
     "ozimmu_ef": OzimmuConfig(split="bitmask", accumulate="group_ef"),
     "ozimmu_h": OzimmuConfig(split="rn_const", accumulate="group_ef"),
+    "ozimmu_sm_b": OzimmuConfig(split="sm", accumulate="naive"),
+    "ozimmu_sm_h": OzimmuConfig(split="sm", accumulate="group_ef"),
     "oz2_b": OzimmuConfig(split="oz2_bitmask", accumulate="oz2"),
     "oz2_h": OzimmuConfig(split="oz2_rn", accumulate="oz2"),
 }
@@ -127,6 +142,7 @@ _SPLITTERS = {
     "bitmask": splitting.split_bitmask,
     "rn": splitting.split_rn,
     "rn_const": splitting.split_rn_const,
+    "sm": splitting.split_sm,
     "oz2_rn": splitting.split_oz2,
     "oz2_bitmask": splitting.split_oz2_bitmask,
     "oz2_rn_fast2": splitting.split_oz2_fast2,
@@ -258,7 +274,7 @@ def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     bit-identical either way.
     """
     n = n_total if n_total is not None else a.shape[-1]
-    beta = splitting.compute_beta(n)
+    beta = splitting.beta_for(cfg.split, n)
     if cfg.use_pallas == "fused" and cfg.split != "rn":
         # every constant-ratio strategy fuses: per-row grids (bitmask,
         # rn_const) and the oz2 shared constant grids alike
@@ -341,12 +357,13 @@ def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
     all because eager shard_map is NotImplemented for some collective/dot
     patterns on older JAX.  Inside an outer jit it inlines for free.
 
-    ``presplit_meta`` (serving): ``(beta, has_base, has_gbase)`` of a
-    frozen B-side Split — the callable then takes ``(a, (digits, scale,
-    base, gbase))`` with the cached digit slices sharded along their
-    contraction axis (they "live pre-sharded": splitting is elementwise
-    given the grid, so the shard of the full-matrix digits equals the
-    pmax-agreed shard-local split) and skips the B splitter entirely.
+    ``presplit_meta`` (serving): ``(beta, has_base, has_gbase, signmag)``
+    of a frozen B-side Split — the callable then takes ``(a, (digits,
+    scale, base, gbase))`` with the cached digit slices sharded along
+    their contraction axis (they "live pre-sharded": splitting is
+    elementwise given the grid, so the shard of the full-matrix digits
+    equals the pmax-agreed shard-local split) and skips the B splitter
+    entirely.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -361,7 +378,7 @@ def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
         in_specs = (a_spec, P(*((None,) * nb + (axis, None))))
         unpack = lambda operand: (operand, None)
     else:
-        beta, has_base, has_gbase = presplit_meta
+        beta, has_base, has_gbase, signmag = presplit_meta
         # digits (k, *batch, n, p) shard on n; scales/bases replicated
         in_specs = (a_spec,
                     (P(*((None,) * (nb + 1) + (axis, None))), P(),
@@ -371,7 +388,7 @@ def _sharded_fn(cfg: OzimmuConfig, mesh, nb: int, n_total: int,
         def unpack(operand):
             digits, scale, base, gbase = operand
             return None, splitting.Split(digits, scale, base, beta, 1,
-                                         gbase=gbase)
+                                         gbase=gbase, signmag=signmag)
 
     if cfg.mesh_reduce == "int32":
         def body(al, operand):
@@ -423,7 +440,8 @@ def _bmm_sharded(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, mesh,
     if rhs_presplit is None:
         return _sharded_fn(cfg, mesh, nb, a.shape[-1], a.dtype)(a, b)
     sp = rhs_presplit
-    meta = (int(sp.beta), sp.base is not None, sp.gbase is not None)
+    meta = (int(sp.beta), sp.base is not None, sp.gbase is not None,
+            bool(sp.signmag))
     fn = _sharded_fn(cfg, mesh, nb, a.shape[-1], a.dtype, meta)
     return fn(a, (sp.digits, sp.scale, sp.base, sp.gbase))
 
@@ -448,10 +466,18 @@ def _check_presplit(a: jax.Array, b_shape, cfg: OzimmuConfig,
                     sp: splitting.Split) -> None:
     """Static consistency checks between a frozen B split and the call."""
     n = a.shape[-1]
-    beta = splitting.compute_beta(n)
+    beta = splitting.beta_for(cfg.split, n)
     if sp.axis != 1:
         raise ValueError(f"rhs_presplit must carry column scales (axis=1), "
                          f"got axis={sp.axis}")
+    # strategy mismatch first: a signed-vs-signmag disagreement also skews
+    # beta, and the actionable diagnosis is the digit convention
+    if bool(sp.signmag) != splitting.is_signmag(cfg.split):
+        raise ValueError(
+            f"rhs_presplit signmag={bool(sp.signmag)} does not match the "
+            f"config's split {cfg.split!r}; sign-magnitude digits decode "
+            f"differently from signed digits — re-freeze under the "
+            f"current spec")
     if sp.beta != beta:
         raise ValueError(f"rhs_presplit beta={sp.beta} disagrees with the "
                          f"contraction's beta={beta} (n={n}); the split was "
@@ -657,22 +683,23 @@ _oz_dot_general.defvjp(_fwd, _bwd)
 # the backward pass — both cotangents run the regular emulation, identical
 # to `_bwd` above.
 
-def _rebuild_split(arrays, beta: int) -> splitting.Split:
+def _rebuild_split(arrays, beta: int, cfg: OzimmuConfig) -> splitting.Split:
     digits, scale, base, gbase = arrays
-    return splitting.Split(digits, scale, base, beta, 1, gbase=gbase)
+    return splitting.Split(digits, scale, base, beta, 1, gbase=gbase,
+                           signmag=splitting.is_signmag(cfg.split))
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def _oz_dot_general_presplit(a, b, presplit_arrays, dnums, cfg, beta):
     return _dot_general_impl(a, b, dnums, cfg,
                              rhs_presplit=_rebuild_split(presplit_arrays,
-                                                         beta))
+                                                         beta, cfg))
 
 
 def _presplit_fwd(a, b, presplit_arrays, dnums, cfg, beta):
     out = _dot_general_impl(a, b, dnums, cfg,
                             rhs_presplit=_rebuild_split(presplit_arrays,
-                                                        beta))
+                                                        beta, cfg))
     return out, (a, b, jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), presplit_arrays))
 
@@ -734,7 +761,15 @@ def ozimmu_dot_general(a: jax.Array, b: jax.Array, dimension_numbers,
     # passed through a jit boundary carries its int fields as tracers.
     # SplitCache freezes with exactly this beta; a concrete mismatch is
     # rejected, a traced one is unobservable (same construction).
-    beta = splitting.compute_beta(math.prod(b.shape[i] for i in dnums[0][1]))
+    beta = splitting.beta_for(cfg.split,
+                              math.prod(b.shape[i] for i in dnums[0][1]))
+    if isinstance(sp.signmag, bool) and \
+            sp.signmag != splitting.is_signmag(cfg.split):
+        raise ValueError(
+            f"rhs_presplit signmag={sp.signmag} does not match the "
+            f"config's split {cfg.split!r}; sign-magnitude digits decode "
+            f"differently from signed digits — re-freeze under the "
+            f"current spec")
     if isinstance(sp.beta, int) and sp.beta != beta:
         raise ValueError(f"rhs_presplit beta={sp.beta} disagrees with the "
                          f"contraction's beta={beta}")

@@ -66,7 +66,7 @@ import numpy as np
 
 from repro.core.accumulate import (num_highprec_adds, oz2_num_highprec_adds,
                                    oz2_num_pairs)
-from repro.core.splitting import compute_beta, compute_r, digit_bits
+from repro.core.splitting import beta_for, compute_r, digit_bits
 
 __all__ = ["DEFAULT_TARGET_EPS", "Plan", "plan_contraction", "auto_k",
            "operand_gap_bits", "kernel_blocks", "tile", "describe_config"]
@@ -85,6 +85,9 @@ K_MIN, K_MAX = 2, 16
 
 _GUARD_BITS = 2
 _TRUNC_EXTRA_BITS = 5  # bitmask splitting: ~1 ulp truncation + no sign bit
+_SM_EXTRA_BITS = 2     # sign-magnitude: k slices cover beta*k - 1 bits (the
+                       # sign occupies one leading-slice bit) + full-ulp
+                       # floor truncation vs RN's half ulp
 
 
 def _clog2(x: int) -> int:
@@ -141,6 +144,7 @@ def _clamp_k(k: int) -> int:
 
 
 _TRUNC_SPLITS = ("bitmask", "oz2_bitmask", "oz2_bitmask_fast2")
+_SM_SPLITS = ("sm",)
 _OZ2_SPLITS = ("oz2_rn", "oz2_bitmask", "oz2_rn_fast2",
                "oz2_bitmask_fast2")
 
@@ -166,8 +170,16 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
     elementwise <= the plain fast-mode error at equal k, so the resolved
     k is equal — never larger — and the ``target_eps`` guarantee carries
     over wherever plain fast mode met it.
+
+    The sign-magnitude split charges :data:`_SM_EXTRA_BITS` (its k slices
+    cover ``beta*k - 1`` mantissa bits, and its floor extraction truncates
+    a full ulp where RN rounds half) — but its ``beta`` is 8, not 7, so
+    at equal ``needed`` the resolved k is smaller: ``ceil((needed+2)/8)``
+    vs ``ceil(needed/7)``, a strict win whenever needed >= ~50 (every f64
+    target), the (k-1)-bit saving the family exists for.
     """
     guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split in _TRUNC_SPLITS
+                           else _SM_EXTRA_BITS if split in _SM_SPLITS
                            else 0)
     if gap_a is None or gap_b is None:
         needed = mantissa + _clog2(n) + guard
@@ -206,9 +218,8 @@ class Plan:
 
 
 @functools.lru_cache(maxsize=1024)
-def _plan_static(n: int, m: int, p: int, k: int, accumulate: str,
+def _plan_static(n: int, m: int, p: int, k: int, beta: int, accumulate: str,
                  fast: bool, dbits: int, word_bits: int) -> Plan:
-    beta = compute_beta(n)
     if accumulate == "oz2":
         r = compute_r(n, beta, dbits)
         gemms = oz2_num_pairs(k, fast)
@@ -252,9 +263,9 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
     error model (max-of-gaps, see :func:`choose_k`) and costed with their
     own pair/ladder accounting.
     """
-    beta = compute_beta(n)
+    beta = beta_for(cfg.split, n)
     if not getattr(cfg, "auto_k", False):
-        return _plan_static(n, m, p, cfg.k, *_cfg_cost_key(cfg, beta))
+        return _plan_static(n, m, p, cfg.k, beta, *_cfg_cost_key(cfg, beta))
     eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
     mantissa = 53 if _bits_of(eps) > 22 else 24
     if a is not None and hasattr(a, "dtype") \
@@ -270,7 +281,7 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
     k = choose_k(n, beta, eps, split=cfg.split, mantissa=mantissa,
                  m=m, p=p, gap_a=gap_a, gap_b=gap_b,
                  fast=bool(getattr(cfg, "fast", False)))
-    base = _plan_static(n, m, p, k, *_cfg_cost_key(cfg, beta))
+    base = _plan_static(n, m, p, k, beta, *_cfg_cost_key(cfg, beta))
     return dataclasses.replace(base, probed=probed)
 
 

@@ -74,7 +74,7 @@ def resolved_k(cfg, n: int, dtype) -> int:
         return cfg.k
     from repro.core import plan
     mantissa = plan._MANTISSA.get(np.dtype(dtype), 24)
-    return plan.choose_k(n, splitting.compute_beta(n),
+    return plan.choose_k(n, splitting.beta_for(cfg.split, n),
                          cfg.target_eps if cfg.target_eps is not None
                          else plan.DEFAULT_TARGET_EPS,
                          split=cfg.split, mantissa=mantissa,
@@ -96,7 +96,7 @@ def presplit_rhs(b: jax.Array, dimension_numbers, cfg) -> Split:
     b3, n = ozimmu.canonical_rhs(b, ozimmu._canonicalize_dnums(
         dimension_numbers))
     k = resolved_k(cfg, n, b3.dtype)
-    beta = splitting.compute_beta(n)
+    beta = splitting.beta_for(cfg.split, n)
     splitter = ozimmu._SPLITTERS[cfg.split]
     return splitter(b3, k, beta=beta, axis=1)
 
@@ -114,7 +114,8 @@ def stack_leading(sp: Split, nstack: int) -> Split:
     import jax.numpy as jnp
     return Split(jnp.moveaxis(sp.digits, 0, nstack),
                  jnp.moveaxis(sp.scale, 0, nstack),
-                 sp.base, sp.beta, sp.axis, gbase=sp.gbase)
+                 sp.base, sp.beta, sp.axis, gbase=sp.gbase,
+                 signmag=sp.signmag)
 
 
 def split_nbytes(sp: Split) -> int:

@@ -12,6 +12,25 @@ Implements the three splitting strategies from the paper:
     scales stay a geometric sequence and group-wise error-free accumulation
     (Alg. 6/7) applies.
 
+plus the *sign-magnitude* strategy of the cuBLASDx DGEMM-emulation line
+(the ``ozimmu_sm_{b,h}`` variants):
+
+  * ``split_sm``       — two's-complement fixed-point decomposition with
+    the sign carried ONLY by the leading slice: the leading digit is
+    ``floor(v * 2^(beta-1))`` of the normalized value ``v = a / base``
+    (signed, full int8 range at beta = 8), every trailing digit is the
+    *unsigned* ``floor`` of the nonnegative residual (``[0, 2^beta - 1]``,
+    stored mod-2^8 in int8 — decode with :func:`sm_decode`).  Because the
+    decomposition is a plain positional number system (no per-element
+    sign vector), slice products contract through the integer MMU
+    unchanged, and the k digits cover ``beta*k - 1`` bits of mantissa —
+    at ``beta = 8`` that is ``8k - 1`` bits versus the signed splitters'
+    ``7k``, the (k-1)-bit saving that lets ``auto`` pick a strictly
+    smaller k at equal ``target_eps``.  Scales stay the geometric
+    sequence of the bitmask/rn_const splits (``scale[s] = base' *
+    2^(-beta*s)`` with ``base' = 4 * 2^floor(log2 rowmax)``), so
+    group-wise error-free accumulation applies unchanged.
+
 plus the two *constant-scaling* strategies of the Ozaki-II line ("Error
 Analysis of Matrix Multiplication Emulation Using Ozaki-II Scheme", Uchino
 et al.; "Improved Scaling for Fast Mode of Ozaki Scheme II", Kawakami &
@@ -86,10 +105,15 @@ import jax.numpy as jnp
 __all__ = [
     "Split",
     "compute_beta",
+    "compute_beta_sm",
+    "beta_for",
     "compute_r",
     "split_bitmask",
     "split_rn",
     "split_rn_const",
+    "split_sm",
+    "sm_decode",
+    "sm_decode_slice",
     "split_oz2",
     "split_oz2_bitmask",
     "split_oz2_fast2",
@@ -116,6 +140,12 @@ class Split(NamedTuple):
               (oz2) strategies — every entry of ``base`` equals it, so the
               slice-pair scales collapse to one exponent ladder per batch
               element.  ``None`` for the per-row/col strategies.
+      signmag: sign-magnitude storage convention (``split_sm``): slice 0 is
+              a signed two's-complement leading digit, slices 1..k-1 are
+              UNSIGNED magnitudes in ``[0, 2^beta - 1]`` stored mod 2^8 in
+              the int8 array — consumers must widen through
+              :func:`sm_decode` before any arithmetic.  False for every
+              signed-digit strategy.
     """
 
     digits: jax.Array
@@ -124,6 +154,7 @@ class Split(NamedTuple):
     beta: int
     axis: int
     gbase: Optional[jax.Array] = None
+    signmag: bool = False
 
 
 def compute_beta(n: int) -> int:
@@ -139,6 +170,40 @@ def compute_beta(n: int) -> int:
     if beta < 1:
         raise ValueError(f"n={n} too large for int8 Ozaki scheme (beta < 1)")
     return beta
+
+
+def compute_beta_sm(n: int) -> int:
+    """beta for the sign-magnitude strategy: min(8, floor((31-log2 n)/2)).
+
+    Sign-magnitude digits use the FULL int8 range (the leading digit spans
+    [-2^(beta-1), 2^(beta-1)-1], trailing magnitudes [0, 2^beta - 1]) — no
+    bit is reserved for a per-digit sign — so beta caps at 8 instead of 7.
+    The INT32 no-overflow bound is the same ``n * (2^beta - 1)^2 < 2^31``
+    as :func:`compute_beta` (every digit magnitude is strictly below
+    2^beta): at beta = 8, clog2(n) <= 15 gives
+    ``2^15 * 255^2 = 2,130,739,200 < 2^31``.
+    """
+    if n <= 0:
+        raise ValueError(f"contraction length must be positive, got {n}")
+    clog2 = max(1, (n - 1).bit_length())
+    beta = min(8, (31 - clog2) // 2)
+    if beta < 1:
+        raise ValueError(f"n={n} too large for int8 Ozaki scheme (beta < 1)")
+    return beta
+
+
+# splits using the sign-magnitude storage convention (Split.signmag=True)
+SM_SPLITS = ("sm",)
+
+
+def is_signmag(split: str) -> bool:
+    return split in SM_SPLITS
+
+
+def beta_for(split: str, n: int) -> int:
+    """Slice width of a splitting strategy at contraction length n — the
+    single dispatch point for the sign-magnitude family's wider slices."""
+    return compute_beta_sm(n) if split in SM_SPLITS else compute_beta(n)
 
 
 def compute_r(n: int, beta: int, digit_bits: Optional[int] = None) -> int:
@@ -360,6 +425,88 @@ def _rn_const_extract(a: jax.Array, mu: jax.Array, beta: int, k: int,
     return jnp.stack(digits)
 
 
+def split_sm(a: jax.Array, k: int, *, beta: Optional[int] = None,
+             axis: int = 0,
+             rowmax_reduce: Optional[Callable] = None) -> Split:
+    """Sign-magnitude splitting (``ozimmu_sm_b`` / ``ozimmu_sm_h``).
+
+    Two's-complement fixed-point decomposition of the normalized value
+    ``v = a / anchor`` with ``anchor = 2 * 2^floor(log2 rowmax)`` (so
+    ``|v| < 1`` STRICTLY, even when rowmax is itself a power of two):
+
+        d_1  = floor(v * 2^(beta-1))          in [-2^(beta-1), 2^(beta-1)-1]
+        r_1  = v * 2^(beta-1) - d_1           in [0, 1)   — nonnegative!
+        d_s  = floor(r_{s-1} * 2^beta)        in [0, 2^beta - 1],  s >= 2
+
+    The sign lives ONLY in the leading digit (``a < 0  <=>  d_1 < 0``);
+    every trailing digit is an unsigned magnitude, so k digits cover
+    ``beta*k - 1`` mantissa bits — at beta = 8 (``compute_beta_sm``) that
+    is 8k-1 bits versus the 7k of the beta-7 signed splitters, the
+    (k-1)-bit saving the planner exploits.  Because the decomposition is
+    an exact positional number system (every step is a pow2 multiply plus
+    an exact ``x - floor(x)``), slice-pair products reconstruct signed
+    results exactly through plain integer GEMMs — no per-element sign
+    fixup in the accumulation.
+
+    Storage: digits are stored mod 2^8 in one int8 array (trailing values
+    above 127 wrap negative); consumers widen through :func:`sm_decode`.
+    Scales stay the geometric contract ``scale[s] = base * 2^(-beta*s)``
+    with the stored ``Split.base = 2 * anchor``, so group-wise error-free
+    accumulation and the oz2-style scale folds apply unchanged.  Batched /
+    ``rowmax_reduce`` like :func:`split_bitmask` (one reduction).
+    """
+    if beta is None:
+        beta = compute_beta_sm(_contract_len(a, axis))
+    rowmax = _rowmax(a, axis)
+    if rowmax_reduce is not None:
+        rowmax = rowmax_reduce(rowmax)
+    anchor = 2.0 * _pow2_floor(rowmax)
+    digits = _sm_extract(a, anchor, beta, k, axis)
+    # leading grid = anchor * 2^(1-beta) = (2*anchor) * 2^(-beta)
+    base = 2.0 * anchor
+    return Split(digits, _geo_scales(base, beta, k), base, beta, axis,
+                 signmag=True)
+
+
+def _sm_extract(a: jax.Array, anchor: jax.Array, beta: int, k: int,
+                axis: int) -> jax.Array:
+    """The sign-magnitude extraction loop against a per-row power-of-two
+    ``anchor > rowmax``; returns ``(k, *batch, m, n)`` int8 (trailing
+    slices stored mod 2^8)."""
+    two_beta = jnp.asarray(2.0 ** beta, a.dtype)
+    dmax = jnp.asarray(2.0 ** beta - 1.0, a.dtype)
+    r = a * _bcast(1.0 / anchor, axis)              # exact; |r| < 1 strictly
+    r = r * jnp.asarray(2.0 ** (beta - 1), a.dtype)
+    d = jnp.floor(r)                                # signed leading digit
+    r = r - d                                       # r in [0, 1); rounds to
+    #   exactly 1.0 only for tiny-negative r (1 - eps, eps < 2^-p, is not
+    #   representable) — the clamp below then emits the true all-(2^beta-1)
+    #   digit cascade of the infinite-precision extraction
+    digits = [d.astype(jnp.int8)]                   # in [-2^(b-1), 2^(b-1)-1]
+    for _ in range(k - 1):
+        r = r * two_beta
+        d = jnp.minimum(jnp.floor(r), dmax)         # in [0, 2^beta - 1]
+        r = r - d                                   # exact
+        digits.append(jnp.where(d > 127.0, d - 256.0, d).astype(jnp.int8))
+    return jnp.stack(digits)
+
+
+def sm_decode(digits: jax.Array) -> jax.Array:
+    """Widen stored sign-magnitude digits ``(k, ...)`` int8 -> int16 values:
+    slice 0 stays signed, slices 1..k-1 un-wrap to [0, 2^beta - 1]."""
+    w = digits.astype(jnp.int16)
+    if w.shape[0] <= 1:
+        return w
+    t = w[1:]
+    return jnp.concatenate([w[:1], jnp.where(t < 0, t + 256, t)], axis=0)
+
+
+def sm_decode_slice(d: jax.Array, s: int) -> jax.Array:
+    """Widen ONE stored slice (0-indexed position ``s``) to int16 values."""
+    w = d.astype(jnp.int16)
+    return w if s == 0 else jnp.where(w < 0, w + 256, w)
+
+
 def _global_base(a: jax.Array, axis: int,
                  rowmax_reduce: Optional[Callable]) -> jax.Array:
     """Per-batch-element global |a| maximum, broadcast back to the per-row
@@ -472,7 +619,8 @@ def split_oz2_bitmask_fast2(a: jax.Array, k: int, *,
 def reconstruct(split: Split, dtype=None) -> jax.Array:
     """sum_s diag(scale[s]) @ digits[s] (or the axis=1 transpose form)."""
     dt = dtype or split.scale.dtype
-    d = split.digits.astype(dt)
+    digits = sm_decode(split.digits) if split.signmag else split.digits
+    d = digits.astype(dt)
     if split.axis == 0:
         return jnp.sum(d * split.scale[..., :, None], axis=0)
     return jnp.sum(d * split.scale[..., None, :], axis=0)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import plan
 from repro.core.splitting import (Split, _geo_scales, _pow2_ceil,
-                                  _pow2_floor, _rowmax)
+                                  _pow2_floor, _rowmax, sm_decode)
 from repro.kernels import group_gemm as _gg
 from repro.kernels import scale_accum as _sa
 from repro.kernels import split_fused as _sf
@@ -80,7 +80,7 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
         sp = split_fused(jnp.swapaxes(a, -1, -2), k, beta, mode=mode,
                          axis=0, rowmax_reduce=rowmax_reduce)
         return Split(jnp.swapaxes(sp.digits, -1, -2), sp.scale, sp.base,
-                     beta, 1, gbase=sp.gbase)
+                     beta, 1, gbase=sp.gbase, signmag=sp.signmag)
     rowmax = _rowmax(a, 0)                              # (*batch, m)
     if rowmax_reduce is not None:
         rowmax = rowmax_reduce(rowmax)
@@ -97,8 +97,16 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
         base = mu * (2.0 ** beta)
         invgrid = 1.0 / mu
         kmode = "rn_const"
+    elif mode == "sm":
+        # sign-magnitude: leading grid = anchor * 2^(1-beta) with the
+        # strict anchor 2*2^floor(log2 rowmax) > rowmax; the stored base
+        # is 2*anchor so scale[s] = base * 2^(-beta*s) (splitting.split_sm)
+        anchor = 2.0 * _pow2_floor(rowmax)
+        base = 2.0 * anchor
+        invgrid = (2.0 ** (beta - 1)) / anchor
+        kmode = "sm"
     else:
-        raise ValueError(f"fused splitting supports bitmask/rn_const/"
+        raise ValueError(f"fused splitting supports bitmask/rn_const/sm/"
                          f"oz2_bitmask/oz2_rn/oz2_bitmask_fast2/"
                          f"oz2_rn_fast2, got {mode!r}")
     if mode in ("oz2_rn", "oz2_bitmask"):
@@ -126,7 +134,7 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
                              interpret=INTERPRET)[:, :rows, :n]
     digits = digits.reshape((k,) + batch + (m, n))
     return Split(digits, _geo_scales(base, beta, k), base, beta, 0,
-                 gbase=gbase)
+                 gbase=gbase, signmag=(mode == "sm"))
 
 
 def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
@@ -141,8 +149,12 @@ def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
     """
     idx_a = [s - 1 for s, _ in pairs]
     idx_b = [t - 1 for _, t in pairs]
-    a8 = sa.digits[jnp.asarray(idx_a)]      # (G, *batch, m, n)
-    b8 = sb.digits[jnp.asarray(idx_b)]
+    # sign-magnitude splits widen to int16 values before the gather (the
+    # Pallas MAC body is dtype-generic; int32 accumulation is unchanged)
+    da = sm_decode(sa.digits) if sa.signmag else sa.digits
+    db = sm_decode(sb.digits) if sb.signmag else sb.digits
+    a8 = da[jnp.asarray(idx_a)]             # (G, *batch, m, n)
+    b8 = db[jnp.asarray(idx_b)]
     G = a8.shape[0]
     batch = a8.shape[1:-2]
     m, n = a8.shape[-2], a8.shape[-1]

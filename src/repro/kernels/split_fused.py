@@ -24,6 +24,12 @@ equilibrated digits are bitwise the per-row splitter's, so the wrapper
 (``repro.kernels.ops.split_fused``) routes them through the per-row grid
 path and only attaches the constant equilibrated base ``gbase = 2``.
 
+Sign-magnitude mode (``mode="sm"``, the ozimmu_sm variants): floor
+extraction with the sign carried only by the leading digit — the wrapper
+passes ``invgrid = 2^(beta-1) / anchor`` so the first integer part is the
+signed leading digit and every residual stays in [0, 1); trailing digits
+are unsigned magnitudes stored mod 2^8 (``splitting.sm_decode``).
+
 Layout: grid over (m/bm, n/bn) tiles; input tile (bm, bn) f32 in VMEM;
 output (k, bm, bn) int8 in VMEM.  bn is a multiple of 128 (lane width),
 bm a multiple of 8 (f32 sublanes).
@@ -62,6 +68,25 @@ def _split_kernel(a_ref, invgrid_ref, out_ref, *, k: int, beta: int,
             d = jnp.trunc(r)
             out_ref[s, :, :] = d.astype(jnp.int8)
             r = (r - d) * two_beta  # exact: subtraction aligned, pow2 scale
+    elif mode == "sm":
+        # sign-magnitude (splitting.split_sm): invgrid = 2^(beta-1)/anchor,
+        # so floor(r) is the signed leading digit and every residual is
+        # NONNEGATIVE — trailing digits are unsigned magnitudes in
+        # [0, 2^beta - 1], stored mod 2^8 in the int8 output (decode with
+        # splitting.sm_decode).  Same exact pow2-multiply + x - floor(x)
+        # sequence as the library splitter: bit-identical digits.
+        dmax = jnp.asarray(2.0 ** beta - 1.0, a.dtype)
+        d = jnp.floor(r)
+        out_ref[0, :, :] = d.astype(jnp.int8)
+        r = (r - d) * two_beta
+        for s in range(1, k):
+            # min-clamp mirrors the library splitter: a tiny-negative lead
+            # residual rounds to exactly 1.0, whose true digit cascade is
+            # all 2^beta - 1 (bit-identical — see splitting._sm_extract)
+            d = jnp.minimum(jnp.floor(r), dmax)
+            out_ref[s, :, :] = jnp.where(d > 127.0, d - 256.0,
+                                         d).astype(jnp.int8)
+            r = (r - d) * two_beta
     else:  # round-to-nearest-even, constant ratio (Alg. 8)
         # native RN-even op (the paper's sigma trick is a CUDA workaround and
         # is unsafe under XLA:CPU fast-math constant folding — see core)

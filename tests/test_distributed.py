@@ -296,7 +296,8 @@ def test_ozimmu_sharded_bitwise_all_variants():
         dn = (((1,), (0,)), ((), ()))
         mesh = make_test_mesh(data=1, model=8)
         accums = ("f32", "df32")
-        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+                     "ozimmu_sm_b", "ozimmu_sm_h"):
             for accum in accums:
                 cfg = ozimmu.VARIANTS[name].with_(k=6, accum_dtype=accum)
                 ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
@@ -324,7 +325,8 @@ def test_ozimmu_sharded_bitwise_x64():
         b = jnp.asarray(rng.standard_normal((512, 40)), jnp.float64)
         dn = (((1,), (0,)), ((), ()))
         mesh = make_test_mesh(data=1, model=8)
-        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+                     "ozimmu_sm_b", "ozimmu_sm_h"):
             cfg = ozimmu.VARIANTS[name].with_(k=8, accum_dtype="f64")
             ref = ozimmu.ozimmu_dot_general(a, b, dn, cfg)
             with set_mesh(mesh):
@@ -415,7 +417,8 @@ def test_ozimmu_sharded_fused_pipeline_bitwise():
         b = jnp.asarray(phi_mat(256, 64), jnp.float32)
         dn = (((1,), (0,)), ((), ()))
         mesh = make_test_mesh(data=1, model=8)
-        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h"):
+        for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
+                     "ozimmu_sm_b", "ozimmu_sm_h"):
             for accum in ("f32", "df32"):
                 cfg = ozimmu.VARIANTS[name].with_(
                     k=6, accum_dtype=accum, use_pallas="fused")
@@ -512,6 +515,52 @@ def test_oz2_fast2_sharded_int32_bitwise():
     """)
 
 
+def test_sm_auto_sharded_int32_bitwise():
+    """The sign-magnitude acceptance matrix cell: ``ozimmu_sm_h-auto`` is
+    bit-identical across {XLA, :fused, @mesh/int32, rhs_presplit} — all
+    jitted, so auto-k resolves the same static mantissa-coverage plan on
+    every path, and the sm digit grid is pmax-agreed across shards with
+    the signed products psum'd exactly in int32."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ozimmu, split_cache
+        from repro.distributed.compat import set_mesh
+        from repro.launch.mesh import make_test_mesh
+
+        rng = np.random.default_rng(17)
+        def phi_mat(m, n, phi=2.0):
+            u = rng.uniform(0, 1, (m, n)); z = rng.standard_normal((m, n))
+            return (u - 0.5) * np.exp(phi * z)
+
+        a = jnp.asarray(phi_mat(48, 256), jnp.float32)
+        b = jnp.asarray(phi_mat(256, 64), jnp.float32)
+        dn = (((1,), (0,)), ((), ()))
+        mesh = make_test_mesh(data=1, model=8)
+        for stem in ("ozimmu_sm_h-auto:df32", "ozimmu_sm_b-auto:df32"):
+            cfg = ozimmu.parse_spec(stem)
+            ref = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                a, b, dn, cfg))(a, b)
+            fused = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                a, b, dn, ozimmu.parse_spec(stem + ":fused")))(a, b)
+            assert bool(jnp.all(ref == fused)), (stem, "fused")
+            sp = split_cache.SplitCache().get(b, dn, cfg)
+            pre = jax.jit(lambda a, b, sp: ozimmu.ozimmu_dot_general(
+                a, b, dn, cfg, rhs_presplit=sp))(a, b, sp)
+            assert bool(jnp.all(ref == pre)), (stem, "presplit")
+            with set_mesh(mesh):
+                mcfg = ozimmu.parse_spec(stem + "@model/int32")
+                got = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                    a, b, dn, mcfg))(a, b)
+                gotf = jax.jit(lambda a, b: ozimmu.ozimmu_dot_general(
+                    a, b, dn,
+                    ozimmu.parse_spec(stem + ":fused@model/int32")))(a, b)
+            assert bool(jnp.all(ref == got)), (stem, "@mesh/int32")
+            assert bool(jnp.all(ref == gotf)), (stem, "fused@mesh/int32")
+            print(stem, "4-way bitwise OK")
+        print("OK")
+    """)
+
+
 def test_presplit_sharded_bitwise_all_variants():
     """Serving split-cache x @mesh: a frozen B-side split entering the
     shard_map pre-sharded along the contraction axis is bit-identical to
@@ -532,7 +581,7 @@ def test_presplit_sharded_bitwise_all_variants():
         cache = split_cache.SplitCache()
         FAST = {"oz2_h": True, "oz2_b": "fast2"}   # cover :fast AND :fast2
         for name in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
-                     "oz2_b", "oz2_h"):
+                     "ozimmu_sm_b", "ozimmu_sm_h", "oz2_b", "oz2_h"):
             for pallas in (False, "fused"):
                 if pallas == "fused" and name == "ozimmu_rn":
                     continue  # adaptive RN has no fused splitter

@@ -67,8 +67,10 @@ def test_docs_quote_enough_specs():
     specs = {s for _, s in SPECS}
     assert {"ozimmu_h-8", "ozimmu_h-8:df32@model",
             "ozimmu_h-auto:df32:fused", "oz2_h-auto:fast",
-            "oz2_h-auto:fast2", "oz2_b-8:df32@model"} <= specs, specs
-    assert len(specs) >= 8, specs
+            "oz2_h-auto:fast2", "oz2_b-8:df32@model",
+            "ozimmu_sm_h-auto:df32", "ozimmu_sm_b-8",
+            "ozimmu_sm_h-8:df32:fused@model/int32"} <= specs, specs
+    assert len(specs) >= 11, specs
 
 
 @pytest.mark.parametrize("rel,spec", SPECS,
@@ -92,7 +94,9 @@ def test_fast_tokens_rejected_outside_oz2():
     for tok, spec in (("fast", "ozimmu_h-8:fast"),
                       ("fast2", "ozimmu_h-8:fast2"),
                       ("fast", "ozimmu_ef-8:df32:fast"),
-                      ("fast2", "ozimmu-8:fast2:fused")):
+                      ("fast2", "ozimmu-8:fast2:fused"),
+                      ("fast", "ozimmu_sm_h-8:fast"),
+                      ("fast2", "ozimmu_sm_b-auto:df32:fast2")):
         with pytest.raises(ValueError, match=f"'{tok}'"):
             make_engine(spec)
 
@@ -118,3 +122,16 @@ def test_fast2_spec_round_trips():
     assert parse_spec("oz2_b-auto:fast2:df32").split == "oz2_bitmask_fast2"
     make_engine("oz2_h-auto:fast2")
     make_engine("oz2_h-8:fast2:fused@model/int32")
+
+
+def test_sm_specs_round_trip():
+    """The canonical sign-magnitude specs build engines whose configs
+    carry the ``sm`` split strategy with the documented accumulators
+    (the grammar rows documented in docs/engine.md)."""
+    from repro.core.ozimmu import parse_spec
+    cfg = parse_spec("ozimmu_sm_h-8")
+    assert cfg.split == "sm" and cfg.accumulate == "group_ef"
+    cfg = parse_spec("ozimmu_sm_b-auto:df32")
+    assert cfg.split == "sm" and cfg.accumulate == "naive" and cfg.auto_k
+    make_engine("ozimmu_sm_h-auto:df32")
+    make_engine("ozimmu_sm_h-8:df32:fused@model/int32")

@@ -70,12 +70,13 @@ def test_batched_equals_per_batch_loop(rng):
     a = phi_tensor(rng, (4, 16, 48))
     b = phi_tensor(rng, (4, 48, 8))
     dn = (((2,), (1,)), ((0,), (0,)))
-    for variant in ("ozimmu", "ozimmu_rn", "ozimmu_h"):
+    for variant in ("ozimmu", "ozimmu_rn", "ozimmu_h",
+                    "ozimmu_sm_b", "ozimmu_sm_h"):
         cfg = VARIANTS[variant].with_(k=8)
         got = np.asarray(ozimmu_dot_general(a, b, dn, cfg))
         want = np.stack([np.asarray(ozimmu_matmul(a[i], b[i], cfg))
                          for i in range(a.shape[0])])
-        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got, want, err_msg=variant)
 
 
 def test_oz2_fast_modes_batched_equals_loop_and_grads(rng):
@@ -103,12 +104,15 @@ def test_oz2_fast_modes_batched_equals_loop_and_grads(rng):
                                rtol=1e-9, atol=1e-12)
 
 
-def test_grads_of_batched_contraction(rng):
-    """Cotangents flow through the emulation under general dnums."""
+@pytest.mark.parametrize("variant", ["ozimmu_h", "ozimmu_sm_h"])
+def test_grads_of_batched_contraction(rng, variant):
+    """Cotangents flow through the emulation under general dnums — the
+    sign-magnitude family included (its cotangent contractions re-split
+    both operands under the sm convention)."""
     a = phi_tensor(rng, (3, 9, 20))
     b = phi_tensor(rng, (3, 20, 7))
     dn = (((2,), (1,)), ((0,), (0,)))
-    cfg = VARIANTS["ozimmu_h"].with_(k=10)
+    cfg = VARIANTS[variant].with_(k=10)
 
     def loss_oz(a, b):
         return jnp.sum(jnp.sin(ozimmu_dot_general(a, b, dn, cfg)))

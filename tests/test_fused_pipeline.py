@@ -73,20 +73,24 @@ def test_fused_bit_identical_batched_dot_general(rng):
     k = jnp.asarray(make_phi_matrix(rng, 4 * 10, 64,
                                     dtype=np.float32).reshape(4, 10, 64))
     dn = (((2,), (2,)), ((0,), (0,)))
-    for accum in ("f32", "df32"):
-        cfg = VARIANTS["ozimmu_h"].with_(k=5, accum_dtype=accum)
-        ref = np.asarray(ozimmu_dot_general(q, k, dn, cfg))
-        fused = np.asarray(ozimmu_dot_general(
-            q, k, dn, cfg.with_(use_pallas="fused")))
-        np.testing.assert_array_equal(fused, ref)
+    for variant in ("ozimmu_h", "ozimmu_sm_h"):
+        for accum in ("f32", "df32"):
+            cfg = VARIANTS[variant].with_(k=5, accum_dtype=accum)
+            ref = np.asarray(ozimmu_dot_general(q, k, dn, cfg))
+            fused = np.asarray(ozimmu_dot_general(
+                q, k, dn, cfg.with_(use_pallas="fused")))
+            np.testing.assert_array_equal(fused, ref, err_msg=variant)
 
 
-def test_fused_vjp_bit_identical(rng):
+@pytest.mark.parametrize("variant", ["ozimmu_h", "ozimmu_sm_h"])
+def test_fused_vjp_bit_identical(rng, variant):
     """Gradients flow through the same emulated cotangent contractions:
-    fused and unfused backward passes agree bit for bit."""
+    fused and unfused backward passes agree bit for bit — including the
+    sign-magnitude family, whose cotangent contractions re-split under
+    the same sm digit convention."""
     a = jnp.asarray(make_phi_matrix(rng, 24, 96))
     b = jnp.asarray(make_phi_matrix(rng, 96, 16))
-    cfg = VARIANTS["ozimmu_h"].with_(k=6)
+    cfg = VARIANTS[variant].with_(k=6)
 
     def loss(cfg):
         return lambda a, b: jnp.sum(jnp.sin(ozimmu_matmul(a, b, cfg)))

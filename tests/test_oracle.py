@@ -22,9 +22,10 @@ and exact zero rows/columns.  Three families of assertions:
     its measured headline error on the hostile grid stays within 4x the
     oz2 FULL mode's.
 
-The fast-mode axis makes this a 7-variant matrix: the four ozimmu
-variants plus oz2_{b,h} x {full, :fast, :fast2}, each against the
-{f64, df32, f32} accumulators.
+The fast-mode axis makes this a 9-variant matrix: the four signed ozimmu
+variants, the two sign-magnitude ones (ozimmu_sm_b / ozimmu_sm_h, bound
+``error_bound_sm``), plus oz2_{b,h} x {full, :fast, :fast2}, each against
+the {f64, df32, f32} accumulators.
 
 Domain note (documented in docs/engine.md): the ``df32``/``f32``
 accumulators hold scales in f32, so their bounds apply on operands whose
@@ -56,6 +57,10 @@ BOUNDS = {
     "ozimmu_ef": lambda a, b, k, u, fast:
         analysis.error_bound_group_ef(a, b, k, u),
     "ozimmu_h": lambda a, b, k, u, fast: analysis.error_bound_rn(a, b, k, u),
+    "ozimmu_sm_b": lambda a, b, k, u, fast:
+        analysis.error_bound_sm(a, b, k, u),
+    "ozimmu_sm_h": lambda a, b, k, u, fast:
+        analysis.error_bound_sm(a, b, k, u),
     "oz2_b": lambda a, b, k, u, fast:
         analysis.error_bound_oz2(a, b, k, fast, u),
     "oz2_h": lambda a, b, k, u, fast:
@@ -95,6 +100,19 @@ def _row_spread_cancel(rng, m, n, p, lo):
     return a, b
 
 
+def _alt_sign_rows(rng, m, n, bits):
+    """Whole rows alternate sign under a wide per-row magnitude spread —
+    the sign-magnitude splitters' hostile shape: every element of every
+    other row extracts a NEGATIVE leading digit, and the tiniest negative
+    entries sit exactly where the two's-complement lead residual rounds
+    to 1.0 (the all-(2^beta - 1) digit-cascade clamp of
+    ``splitting._sm_extract``).  Used on the contraction axis of B it
+    also drives heavy output cancellation."""
+    a = np.abs(_wide_spread(rng, m, n, bits))
+    a = a * 2.0 ** rng.integers(-bits, 1, (m, 1)).astype(np.float64)
+    return a * (-1.0) ** np.arange(m)[:, None]
+
+
 def _scaled_rows(rng, m, n, lo):
     """Rows scattered down to 2^lo below the matrix maximum."""
     a = rng.standard_normal((m, n))
@@ -126,6 +144,8 @@ def _hostile_cases(f32_domain: bool):
         ("phi2", make_phi_matrix(rng, m, n, phi=2.0),
          make_phi_matrix(rng, n, p, phi=2.0)),
         ("row_spread_cancel", *_row_spread_cancel(rng, m, n, p, lo)),
+        ("sign_flip", _alt_sign_rows(rng, m, n, 30),
+         _alt_sign_rows(rng, n, p, 30)),
     ]
     return [(name, a, b, *dd_matmul(a, b)) for name, a, b in cases]
 
@@ -285,6 +305,38 @@ def test_oz2_fast2_economy_vs_fast():
             np.asarray(ozimmu_matmul(aj, bj, cfg_f2)), hi, lo))
     assert head_f2 <= 4.0 * head_full, (head_f2, head_full)
     assert head_f2 < head_f1, (head_f2, head_f1)
+
+
+def test_sm_auto_economy_vs_ozimmu_h():
+    """Acceptance for the sign-magnitude family: at the default
+    ``target_eps``, ``ozimmu_sm_h-auto`` resolves a STRICTLY smaller k
+    than ``ozimmu_h-auto`` — beta_sm = 8 covers ``8k - 1`` bits where the
+    RN splitters cover ``7k``, so ``ceil((needed + 2) / 8) <
+    ceil(needed / 7)`` at every f64-grade needed — hence strictly fewer
+    int8 GEMMs, while its measured relative error (dd reference) still
+    meets ``target_eps`` on every planner-grid cell.  Holds for the
+    probed (eager) plan on each cell AND for the static (traced-shape)
+    plan."""
+    cfg_sm = parse_spec("ozimmu_sm_h-auto")
+    cfg_h = parse_spec("ozimmu_h-auto")
+    eps = plan.DEFAULT_TARGET_EPS
+    # static mantissa-coverage plan (what a jitted call resolves)
+    n = 128
+    p_sm = plan.plan_contraction(cfg_sm, n, n, n)
+    p_h = plan.plan_contraction(cfg_h, n, n, n)
+    assert p_sm.k < p_h.k, (p_sm.k, p_h.k)
+    assert p_sm.int8_gemms < p_h.int8_gemms
+    for a, b, hi, lo in _planner_grid():
+        n = a.shape[0]
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        p_sm = plan.plan_contraction(cfg_sm, n, n, n, a=aj, b=bj)
+        p_h = plan.plan_contraction(cfg_h, n, n, n, a=aj, b=bj)
+        assert p_sm.probed and p_h.probed
+        assert p_sm.k < p_h.k, (p_sm.k, p_h.k)
+        assert p_sm.int8_gemms < p_h.int8_gemms
+        err = max_relative_error(
+            np.asarray(ozimmu_matmul(aj, bj, cfg_sm)), hi, lo)
+        assert err <= eps, (p_sm.k, err)
 
 
 def test_oz2_ladder_adds_strictly_fewer_at_equal_k():

@@ -48,7 +48,7 @@ def operands():
 SPECS = [
     f"{variant}-4{dt}{fused}"
     for variant in ("ozimmu", "ozimmu_rn", "ozimmu_ef", "ozimmu_h",
-                    "oz2_b", "oz2_h")
+                    "ozimmu_sm_b", "ozimmu_sm_h", "oz2_b", "oz2_h")
     for dt in ("", ":df32", ":f32")
     for fused in ("", ":fused")
 ] + ["oz2_h-4:fast", "oz2_b-4:df32:fast", "oz2_h-4:fast:fused",
@@ -138,6 +138,16 @@ def test_presplit_mismatch_rejected(operands):
         ozimmu.ozimmu_dot_general(a, b, DN,
                                   ozimmu.parse_spec("oz2_h-4"),
                                   rhs_presplit=sp)
+    # a split frozen under a SIGNED spec cannot serve a sign-magnitude
+    # config (its stored digits decode differently) — and vice versa
+    with pytest.raises(ValueError, match="signmag"):
+        ozimmu.ozimmu_dot_general(a, b, DN,
+                                  ozimmu.parse_spec("ozimmu_sm_h-4:df32"),
+                                  rhs_presplit=sp)
+    sp_sm = split_cache.SplitCache().get(
+        b, DN, ozimmu.parse_spec("ozimmu_sm_h-4:df32"))
+    with pytest.raises(ValueError, match="signmag"):
+        ozimmu.ozimmu_dot_general(a, b, DN, cfg, rhs_presplit=sp_sm)
 
 
 # ---------------------------------------------------------------------------
@@ -233,11 +243,19 @@ def test_cache_keying(operands):
     assert cache.stats.misses == 4
     cache.get(b, DN, ozimmu.parse_spec("oz2_h-4:fast2"))
     assert (cache.stats.hits, cache.stats.misses) == (2, 4)
+    # sign-magnitude is its own split strategy ("sm"): a distinct entry
+    # from every signed spec at the same k/dtype...
+    cache.get(b, DN, ozimmu.parse_spec("ozimmu_sm_h-4"))
+    assert cache.stats.misses == 5
+    # ...while sm_b / sm_h (same splitter, different accumulation) share
+    # one frozen split — the digits are identical by construction
+    cache.get(b, DN, ozimmu.parse_spec("ozimmu_sm_b-4"))
+    assert (cache.stats.hits, cache.stats.misses) == (3, 5)
     # "updated" weights (a new array) => miss
     b2 = b + 0.0
     cache.get(b2, DN, h)
-    assert cache.stats.misses == 5
-    assert len(cache) == 5
+    assert cache.stats.misses == 6
+    assert len(cache) == 6
 
 
 def test_cache_weakref_invalidation(operands):

@@ -413,3 +413,156 @@ def test_property_eft_invariants_all_splitters(m, n, k, nb, axis, dtype,
         if name.startswith("oz2") and not name.endswith("_fast2"):
             anchor = np.max(anchor, axis=(-1, -2), keepdims=True)
         assert np.all(np.abs(res) <= anchor * limit + 1e-300), name
+
+
+# ---------------------------------------------------------------------------
+# sign-magnitude splits — ozimmu_sm_b / ozimmu_sm_h (satellite: property
+# invariants for the unsigned-magnitude digit family)
+# ---------------------------------------------------------------------------
+
+from repro.core import compute_beta_sm, split_sm, sm_decode
+
+
+def test_compute_beta_sm_model():
+    """beta_sm = min(8, (31 - clog2 n)//2): one more digit bit than eq. (4)
+    wherever the int32 budget allows — the unsigned trailing magnitudes
+    spend no sign bit — and always int32-overflow safe."""
+    assert compute_beta_sm(2) == 8
+    assert compute_beta_sm(256) == 8
+    assert compute_beta_sm(2 ** 15) == 8
+    assert compute_beta_sm(2 ** 16) == 7
+    assert compute_beta_sm(2 ** 18) == 6
+    for n in (2, 256, 2 ** 15, 2 ** 16, 2 ** 18, 2 ** 29):
+        beta = compute_beta_sm(n)
+        assert n * (2 ** beta - 1) ** 2 < 2 ** 31     # int32 MAC safety
+    with pytest.raises(ValueError):
+        compute_beta_sm(2 ** 30)
+
+
+@pytest.mark.parametrize("axis", [0, 1])
+def test_sm_digit_ranges_and_sign_recovery(rng, axis):
+    """Decoded digits: signed leading slice within +-2^(beta-1), trailing
+    slices UNSIGNED in [0, 2^beta - 1]; the operand's sign is recoverable
+    from the leading slice alone (a < 0  <=>  lead digit < 0)."""
+    a = np.asarray(make_phi_matrix(rng, 32, 48, phi=2.0))
+    a[3, 7] = 0.0
+    aj = jnp.asarray(a)
+    s = split_sm(aj, 8, axis=axis)
+    assert s.signmag and s.digits.dtype == jnp.int8
+    d = np.asarray(sm_decode(s.digits), np.int32)
+    assert -(2 ** (s.beta - 1)) <= d[0].min()
+    assert d[0].max() <= 2 ** (s.beta - 1) - 1
+    assert d[1:].min() >= 0 and d[1:].max() <= 2 ** s.beta - 1
+    np.testing.assert_array_equal(d[0] < 0, a < 0)
+
+
+def test_sm_scales_geometric_pow2(rng):
+    """scale[s] = base * 2^(-beta s) with base = 4 * 2^floor(log2 rowmax)
+    — all powers of two (required for the exact pow2 scale folds that
+    keep @mesh/int32 bitwise)."""
+    a = jnp.asarray(make_phi_matrix(rng, 16, 64, phi=2.0))
+    s = split_sm(a, 6)
+    base = np.asarray(s.base)
+    mant, _ = np.frexp(base)
+    assert np.all(mant == 0.5)
+    rowmax = np.max(np.abs(np.asarray(a)), axis=1)
+    np.testing.assert_array_equal(
+        base, 4.0 * 2.0 ** np.floor(np.log2(rowmax)))
+    sc = np.asarray(s.scale)
+    for i in range(6):
+        np.testing.assert_array_equal(sc[i], base * 2.0 ** (-s.beta * (i + 1)))
+    mant, _ = np.frexp(sc[sc != 0])
+    assert np.all(mant == 0.5)
+
+
+def test_sm_reconstruct_exact_when_covered(rng):
+    """k slices cover beta*k - 1 bits; at k=8, beta=8 that is 63 > 54, so
+    the two's-complement digit sum reconstructs A bit-exactly (signed
+    entries included)."""
+    a = jnp.asarray(_bounded_spread_matrix(rng, 16, 32))
+    s = split_sm(a, 8)
+    assert np.array_equal(np.asarray(reconstruct(s)), np.asarray(a))
+    assert np.all(np.asarray(residual(s, a)) == 0.0)
+
+
+def test_sm_tiny_negative_lead_residual_clamp():
+    """Pinned regression for the negative-fraction hazard: for a tiny
+    negative entry the lead residual 1 - eps is not representable and
+    rounds to exactly 1.0; the digit clamp must emit the true
+    infinite-precision cascade (lead -1, trailing all 2^beta - 1) instead
+    of an overflowed wrapped digit that loses a whole scale_1 of value."""
+    a = jnp.asarray(np.array([[0.75, -2.0 ** -60]]))   # n=2 -> beta=8
+    s = split_sm(a, 4, axis=0)
+    d = np.asarray(sm_decode(s.digits), np.int32)
+    assert d[0, 0, 1] == -1
+    np.testing.assert_array_equal(d[1:, 0, 1], 255)
+    # EFT contract still exact, and the residual stays at the k-digit
+    # truncation level (the cascade sums to -base * 2^(-beta k)) plus the
+    # half-ulp lead rounding — NOT a scale_1-sized loss
+    rec = np.asarray(reconstruct(s))
+    res = np.asarray(residual(s, a))
+    assert np.array_equal(rec + res, np.asarray(a))
+    base = float(np.asarray(s.base)[0])
+    assert abs(res[0, 1]) <= (2.0 ** (-s.beta * 4) + 2.0 ** -53) * base
+
+
+def test_sm_rowmax_reduce_grid_agreement(rng):
+    """Mesh-agreeability: shards holding a column slice of A agree with
+    the unsharded split bitwise once ``rowmax_reduce`` (the @mesh pmax
+    hook) hands them the global per-row maxima."""
+    a = np.asarray(make_phi_matrix(rng, 12, 64, phi=2.0))
+    aj = jnp.asarray(a)
+    full = split_sm(aj, 6)
+    global_rowmax = jnp.max(jnp.abs(aj), axis=1)
+    reduce_fn = lambda local: jnp.maximum(local, global_rowmax)
+    for i, sh in enumerate([aj[:, :32], aj[:, 32:]]):
+        s = split_sm(sh, 6, rowmax_reduce=reduce_fn)
+        np.testing.assert_array_equal(np.asarray(s.base),
+                                      np.asarray(full.base))
+        np.testing.assert_array_equal(np.asarray(s.scale),
+                                      np.asarray(full.scale))
+        np.testing.assert_array_equal(
+            np.asarray(s.digits),
+            np.asarray(full.digits)[:, :, 32 * i:32 * (i + 1)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 10), n=st.integers(1, 32), k=st.integers(1, 9),
+    nb=st.integers(0, 2), axis=st.integers(0, 1),
+    dtype=st.sampled_from(["f32", "f64"]), phi=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31),
+)
+def test_property_sm_eft_invariants(m, n, k, nb, axis, dtype, phi, seed):
+    """The sm splitter's contract across dtypes/shapes/batch dims:
+    decoded digit budgets (signed lead, unsigned trail), pow2 scales,
+    ``reconstruct + residual == a`` BITWISE, and the residual under the
+    documented grid bound.  The bound carries one extra term,
+    ``2^(2 - beta - p)`` of the rowmax: the tiny-negative lead residual
+    rounds by up to half an ulp of 1.0 before the digit-cascade clamp
+    reproduces the true extraction (see ``test_sm_tiny_negative_..``)."""
+    rng = np.random.default_rng(seed)
+    np_dtype = np.float32 if dtype == "f32" else np.float64
+    p_bits = 24 if dtype == "f32" else 53
+    batch = (2,) * nb
+    a = make_phi_matrix(rng, int(np.prod(batch, initial=1)) * m, n, phi,
+                        dtype=np_dtype).reshape(batch + (m, n))
+    aj = jnp.asarray(a)
+    s = split_sm(aj, k, axis=axis)
+    assert s.signmag
+    d = np.asarray(sm_decode(s.digits), np.int32)
+    assert -(2 ** (s.beta - 1)) <= d[0].min(initial=0)
+    assert d[0].max(initial=0) <= 2 ** (s.beta - 1) - 1
+    if k > 1:
+        assert d[1:].min(initial=0) >= 0
+        assert d[1:].max(initial=0) <= 2 ** s.beta - 1
+    sc = np.asarray(s.scale)
+    mant, _ = np.frexp(sc[sc != 0])
+    assert np.all(mant == 0.5)
+    rec = np.asarray(reconstruct(s, jnp.float64))
+    res = a.astype(np.float64) - rec
+    assert np.array_equal(rec + res, a.astype(np.float64))
+    rowmax = np.max(np.abs(a), axis=-1 if axis == 0 else -2,
+                    keepdims=True).astype(np.float64)
+    limit = 2.0 ** (-s.beta * k + 2) + 2.0 ** (2 - s.beta - p_bits)
+    assert np.all(np.abs(res) <= rowmax * limit + 1e-300)
