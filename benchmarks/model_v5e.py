@@ -22,11 +22,28 @@ from repro.core.accumulate import (num_highprec_adds, oz2_num_chunks,
 from repro.core.splitting import beta_for, compute_r, digit_bits
 
 
+def base_variant(label: str) -> str:
+    """Bench row label with planner tags (``..._auto``, ``..._auto_prob``)
+    -> the underlying phase-model variant name.  ``_prob`` changes which
+    k the planner resolves, never the kernel pipeline, so tagged labels
+    price through the untagged variant's phase formulas."""
+    stripped = True
+    while stripped:
+        stripped = False
+        for suf in ("_prob", "_auto"):
+            if label.endswith(suf):
+                label = label[: -len(suf)]
+                stripped = True
+    return label
+
+
 def variant_split(variant: str) -> str:
-    """Bench variant label (e.g. ``oz2_h_fast``, ``oz2_h_fast2``) ->
-    splitting strategy name, via the engine's own variant table and its
-    fast2 canonicalization — single source of truth."""
+    """Bench variant label (e.g. ``oz2_h_fast``, ``oz2_h_fast2``, or a
+    planner-tagged ``ozimmu_h_auto_prob``) -> splitting strategy name,
+    via the engine's own variant table and its fast2 canonicalization —
+    single source of truth."""
     from repro.core.ozimmu import VARIANTS, canonical_fast2
+    variant = base_variant(variant)
     if variant.endswith("_fast2"):
         base, fast = variant[:-6], "fast2"
     elif variant.endswith("_fast"):

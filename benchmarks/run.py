@@ -25,33 +25,59 @@ import time
 
 # v2: added the `serving` bench (trace-replay tokens/s + TTFT +
 # split-cache savings; docs/benchmarks.md#serving)
-SUMMARY_SCHEMA_VERSION = 2
+# v3: planner-economy headlines — `accuracy.prob_auto` (probed det/prob
+# auto-k twins) and `breakdown.auto_cost` (static jit-path twins), both
+# gated by check_against
+SUMMARY_SCHEMA_VERSION = 3
 
 
 def _headline_accuracy(rows):
-    """Max-phi errors at the paper's default k=8 per variant (+ fp64)."""
-    phis = sorted({r["phi"] for r in rows if r["variant"] != "fp64"})
-    ks = sorted({r["k"] for r in rows if r["variant"] != "fp64"})
+    """Max-phi errors at the paper's default k=8 per variant (+ fp64),
+    plus the ``prob_auto`` planner-economy section: each ``<label>_prob``
+    auto row paired with its deterministic twin's k / GEMM count."""
+    fixed = [r for r in rows if not r.get("auto")]
+    phis = sorted({r["phi"] for r in fixed if r["variant"] != "fp64"})
+    ks = sorted({r["k"] for r in fixed if r["variant"] != "fp64"})
     if not phis or not ks:
         return {}
     phi = phis[-1]
     k = 8 if 8 in ks else ks[-1]
-    err = {r["variant"]: r["err"] for r in rows
+    err = {r["variant"]: r["err"] for r in fixed
            if r["phi"] == phi and r["k"] == k}
-    fp64 = [r["err"] for r in rows
+    fp64 = [r["err"] for r in fixed
             if r["phi"] == phi and r["variant"] == "fp64"]
-    return {"phi": phi, "k": k, "err": err,
-            "err_fp64": fp64[0] if fp64 else None}
+    out = {"phi": phi, "k": k, "err": err,
+           "err_fp64": fp64[0] if fp64 else None}
+    auto = {r["variant"]: r for r in rows
+            if r.get("auto") and r["phi"] == phi}
+    prob = {}
+    for label, r in sorted(auto.items()):
+        if not label.endswith("_prob"):
+            continue
+        entry = {"k": r["k"], "err": r["err"],
+                 "int8_gemms": r["int8_gemms"]}
+        det = auto.get(label[: -len("_prob")])
+        if det is not None:
+            entry.update(k_det=det["k"], err_det=det["err"],
+                         gemms_det=det["int8_gemms"])
+        prob[label] = entry
+    if prob:
+        out["prob_auto"] = {"phi": phi, "rows": prob}
+    return out
 
 
 def _headline_breakdown(rows):
     """Accumulation-time shares, EF/H/oz2 modeled speedups, and the Plan
     cost accounting (int8 GEMMs / high-precision adds — where the oz2
-    exponent ladder's reduction shows up) at one k."""
-    ks = sorted({r["k"] for r in rows})
+    exponent ladder's reduction shows up) at one k.  Auto-planned rows
+    (``"plan": "auto"``) stay out of the fixed-k section and feed the
+    ``auto_cost`` section instead: the static det/prob k the jit path
+    resolves, with the GEMM-count delta the :prob shave buys."""
+    fixed = [r for r in rows if r.get("plan") != "auto"]
+    ks = sorted({r["k"] for r in fixed})
     k = 8 if 8 in ks else ks[-1]
-    at_k = [r for r in rows if r["k"] == k]
-    return {
+    at_k = [r for r in fixed if r["k"] == k]
+    out = {
         "n": at_k[0]["n"], "k": k,
         "accum_share": {r["variant"]: r["share_accum"] for r in at_k},
         "speedup_vs_ozimmu": {
@@ -61,6 +87,23 @@ def _headline_breakdown(rows):
                                 "hp_adds": r["hp_adds"]}
                  for r in at_k if "int8_gemms" in r},
     }
+    auto = {r["variant"]: r for r in rows if r.get("plan") == "auto"}
+    cost = {}
+    for label, r in sorted(auto.items()):
+        if not label.endswith("_prob"):
+            continue
+        entry = {"k": r["k"], "int8_gemms": r["int8_gemms"],
+                 "hp_adds": r["hp_adds"]}
+        det = auto.get(label[: -len("_prob")])
+        if det is not None:
+            entry.update(
+                k_det=det["k"], gemms_det=det["int8_gemms"],
+                gemms_saved=det["int8_gemms"] - r["int8_gemms"])
+        cost[label] = entry
+    if cost:
+        out["auto_cost"] = {"n": auto[next(iter(auto))]["n"],
+                            "rows": cost}
+    return out
 
 
 def _headline_throughput(rows):
@@ -130,13 +173,29 @@ _HEADLINES = {
 }
 
 
-def check_against(summary: dict, committed_path: str, tol: float = 2.0):
+def check_against(summary: dict, committed_path: str, tol: float = 2.0,
+                  allow_new_rows: bool = False):
     """Regression gate: the run's accuracy headline must not be worse than
     the committed trajectory artifact (``BENCH_ozimmu.json``) by more than
     ``tol``x per variant.  One-sided — better-than-committed always passes
     (quick grids at smaller n measure smaller errors).  Returns a list of
     human-readable failures (empty = gate passes); raises on a summary
     that cannot be compared at all (missing/failed accuracy bench).
+
+    Row sets must MATCH the committed artifact both ways: a committed row
+    missing from this run fails (a variant silently dropped out), and a
+    row in this run that the artifact has never seen fails too — an
+    ungated row is a row whose regressions CI can't see.  Adding a
+    variant legitimately means regenerating ``BENCH_ozimmu.json`` with a
+    full ``python -m benchmarks.run`` in the same change;
+    ``allow_new_rows`` (CLI ``--allow-new-rows``) is the escape hatch for
+    runs that intentionally carry rows the artifact predates.
+
+    The ``prob_auto`` planner-economy headline is gated the same way,
+    plus its own invariants: measured err within ``tol``x, the resolved
+    probabilistic k never above the committed one (quick grids run at
+    n <= the full grid's, which needs no more slices), and within-run
+    economy — k and GEMM count never above the deterministic twin's.
     """
     with open(committed_path) as f:
         committed = json.load(f)
@@ -156,6 +215,44 @@ def check_against(summary: dict, committed_path: str, tol: float = 2.0):
             failures.append(
                 f"accuracy: {variant} err {new_err:.3e} exceeds "
                 f"{tol}x committed {ref_err:.3e}")
+    extra = sorted(set(got) - set(want))
+    if extra and not allow_new_rows:
+        failures.append(
+            f"accuracy: headline row(s) {extra} absent from the committed "
+            f"artifact — regenerate it with a full `python -m "
+            f"benchmarks.run`, or pass --allow-new-rows")
+    got_pa = (bench.get("headline", {}).get("prob_auto") or {}
+              ).get("rows", {})
+    want_pa = (committed["benches"]["accuracy"]["headline"]
+               .get("prob_auto") or {}).get("rows", {})
+    for label, ref in sorted(want_pa.items()):
+        r = got_pa.get(label)
+        if r is None:
+            failures.append(f"prob_auto: row {label!r} missing from this "
+                            f"run's headline")
+            continue
+        if r["err"] > tol * ref["err"]:
+            failures.append(
+                f"prob_auto: {label} err {r['err']:.3e} exceeds "
+                f"{tol}x committed {ref['err']:.3e}")
+        if r["k"] > ref["k"]:
+            failures.append(
+                f"prob_auto: {label} resolved k={r['k']} above committed "
+                f"k={ref['k']} (planner regression)")
+        if "k_det" in r and r["k"] > r["k_det"]:
+            failures.append(
+                f"prob_auto: {label} k={r['k']} exceeds its deterministic "
+                f"twin's k={r['k_det']} — planner economy violated")
+        if "gemms_det" in r and r["int8_gemms"] > r["gemms_det"]:
+            failures.append(
+                f"prob_auto: {label} int8_gemms={r['int8_gemms']} exceeds "
+                f"its deterministic twin's {r['gemms_det']}")
+    extra_pa = sorted(set(got_pa) - set(want_pa))
+    if extra_pa and not allow_new_rows:
+        failures.append(
+            f"prob_auto: row(s) {extra_pa} absent from the committed "
+            f"artifact — regenerate it with a full `python -m "
+            f"benchmarks.run`, or pass --allow-new-rows")
     # serving gate (when both sides ran it): the weight split-cache must
     # stay fully effective — a deterministic property, unlike the
     # wall-clock ratios, which are recorded but not gated (CI noise).
@@ -176,7 +273,7 @@ def check_against(summary: dict, committed_path: str, tol: float = 2.0):
     return failures
 
 
-def main(argv=None):
+def _build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced problem sizes / grids (CI smoke)")
@@ -194,8 +291,19 @@ def main(argv=None):
     ap.add_argument("--check-against", default=None, metavar="BENCH_JSON",
                     help="regression gate: fail (exit 1) if this run's "
                          "accuracy headline errors exceed 2x the committed "
-                         "summary's (e.g. BENCH_ozimmu.json), or any bench "
-                         "failed.  The same gate CI runs — runnable locally.")
+                         "summary's (e.g. BENCH_ozimmu.json), any headline "
+                         "row is unknown to it, or any bench failed.  The "
+                         "same gate CI runs — runnable locally.")
+    ap.add_argument("--allow-new-rows", action="store_true",
+                    help="with --check-against: tolerate headline rows the "
+                         "committed artifact predates (default: unknown "
+                         "rows are a hard failure — an ungated row is a "
+                         "row whose regressions CI can't see)")
+    return ap
+
+
+def main(argv=None):
+    ap = _build_parser()
     args = ap.parse_args(argv)
     if args.summary is None:
         args.summary = ("BENCH_ozimmu.json"
@@ -266,7 +374,8 @@ def main(argv=None):
         print("\nFAILED benches:", failures)
         sys.exit(1)
     if args.check_against:
-        gate = check_against(summary, args.check_against)
+        gate = check_against(summary, args.check_against,
+                             allow_new_rows=args.allow_new_rows)
         if gate:
             print("\n[check] REGRESSION GATE FAILED vs", args.check_against)
             for line in gate:

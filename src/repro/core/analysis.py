@@ -2,6 +2,33 @@
 
 These are used by tests (the computed result must satisfy the bound) and by
 the benchmark harness (predicted-vs-measured error).
+
+Two bound families live here:
+
+* the **deterministic** worst-case bounds (eq. (18) and its variant
+  refinements) — every rounding/truncation error aligned adversarially;
+* their **probabilistic** twins (``prob_error_bound_*``), following the
+  analysis of Abdelfattah, Dongarra, Fasi, Mikaitis & Tisseur, *Analysis
+  of Floating-Point Matrix Multiplication Computed via Integer
+  Arithmetic* (arXiv 2506.11277): modeling the per-term splitting
+  truncations and accumulation roundings as mean-independent bounded
+  random variables, a Hoeffding/Azuma concentration argument replaces
+  every "sum of N error terms" factor ``N`` by
+  ``lambda(delta) * sqrt(N)`` with ``lambda(delta) =
+  sqrt(2 ln(2/delta))``, valid with probability at least ``1 - delta``
+  per entry.  ``delta = 0`` makes ``lambda`` infinite and the effective
+  factor falls back to ``N`` — the deterministic bound is the exact
+  ``delta = 0`` limit, bitwise (the same float expressions evaluate).
+
+The probabilistic model is sharp for the round-to-nearest splits
+(``rn``/``rn_const``/``oz2_rn``): their per-slice errors are symmetric
+half-ulp roundings, the mean-independence hypothesis of 2506.11277.  The
+directed-truncation splits (bitmask, sign-magnitude floor extraction)
+have sign-biased residuals on adversarial operands, where sums grow
+linearly, not like sqrt(N); their probabilistic bounds hold under the
+random-operand model (symmetric element signs re-center the residuals)
+and the *planner* additionally charges back a calibrated bias bit for
+them (``repro.core.plan``).
 """
 from __future__ import annotations
 
@@ -14,6 +41,8 @@ from repro.core.splitting import compute_beta, compute_beta_sm, compute_r
 
 __all__ = [
     "unit_roundoff",
+    "DEFAULT_DELTA",
+    "effective_terms",
     "truncation_bound",
     "accumulation_terms_w",
     "error_bound_ozimmu",
@@ -21,6 +50,11 @@ __all__ = [
     "error_bound_rn",
     "error_bound_sm",
     "error_bound_oz2",
+    "prob_error_bound_ozimmu",
+    "prob_error_bound_group_ef",
+    "prob_error_bound_rn",
+    "prob_error_bound_sm",
+    "prob_error_bound_oz2",
     "flop_counts",
 ]
 
@@ -28,6 +62,32 @@ __all__ = [
 def unit_roundoff(dtype) -> float:
     return {np.dtype(np.float64): 2.0 ** -53,
             np.dtype(np.float32): 2.0 ** -24}[np.dtype(dtype)]
+
+
+# Default per-entry failure probability of the probabilistic bounds and
+# of the planner's ``target_eps_mode="probabilistic"``: one entry in a
+# million runs of a 1k x 1k output, and the concentration constant
+# lambda = sqrt(2 ln(2/delta)) ~ 5.4 stays narrow (3 bits).
+DEFAULT_DELTA = 2.0 ** -20
+
+
+def effective_terms(count, delta: float):
+    """Effective error-term count under the probabilistic model.
+
+    A sum of ``count`` mean-independent error terms, each bounded by
+    ``eps_term``, is at most ``count * eps_term`` deterministically but —
+    by Hoeffding's inequality (2506.11277, Thm. 3.2 shape) — at most
+    ``sqrt(2 ln(2/delta) * count) * eps_term`` with probability at least
+    ``1 - delta``.  Returns ``min(count, lambda(delta) * sqrt(count))``
+    as a float; ``delta <= 0`` returns ``float(count)`` (the
+    deterministic limit, exact for every count in range here).
+    """
+    c = float(count)
+    if delta <= 0.0:
+        return c
+    if not delta < 1.0:
+        raise ValueError(f"delta must be < 1, got {delta}")
+    return min(c, math.sqrt(2.0 * math.log(2.0 / delta) * c))
 
 
 def _gf(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -43,11 +103,19 @@ def _gf(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def truncation_bound(a: np.ndarray, b: np.ndarray, k: int,
-                     beta: int | None = None) -> np.ndarray:
-    """|AB - sum_{s+t<=k+1} A_s B_t| <= 4(k+1) n 2^(-beta k) g f^T — eq. (18)."""
+                     beta: int | None = None,
+                     delta: float = 0.0) -> np.ndarray:
+    """|AB - sum_{s+t<=k+1} A_s B_t| <= 4(k+1) n 2^(-beta k) g f^T — eq. (18).
+
+    ``delta > 0``: the n-term truncation sum concentrates; ``n`` is
+    replaced by ``effective_terms(n, delta)`` and the bound holds with
+    probability >= 1 - delta per entry (under the mean-independent
+    residual model; see the module docstring for where that is sharp).
+    """
     n = a.shape[1]
     beta = beta or compute_beta(n)
-    return 4.0 * (k + 1) * n * 2.0 ** (-beta * k) * _gf(a, b)
+    return 4.0 * (k + 1) * effective_terms(n, delta) \
+        * 2.0 ** (-beta * k) * _gf(a, b)
 
 
 def accumulation_terms_w(k: int, r: int) -> int:
@@ -56,28 +124,38 @@ def accumulation_terms_w(k: int, r: int) -> int:
 
 
 def error_bound_ozimmu(a: np.ndarray, b: np.ndarray, k: int,
-                       u: float | None = None) -> np.ndarray:
+                       u: float | None = None,
+                       delta: float = 0.0) -> np.ndarray:
     """Deterministic bound for Alg. 3+4 (without the k'_max sharpening):
 
         |AB - T_k| <= 4(k+1) n 2^(-beta k) g f^T + (k(k+1)/2 - 1) u |A||B|.
+
+    ``delta > 0`` applies :func:`effective_terms` to both error-term
+    counts (the n-term truncation sum and the k(k+1)/2 - 1 accumulation
+    roundings); per-entry failure probability <= delta.
     """
     u = u if u is not None else unit_roundoff(a.dtype)
-    tb = truncation_bound(a, b, k)
-    return tb + (k * (k + 1) / 2 - 1) * u * (np.abs(a) @ np.abs(b))
+    tb = truncation_bound(a, b, k, delta=delta)
+    adds = effective_terms(k * (k + 1) / 2 - 1, delta)
+    return tb + adds * u * (np.abs(a) @ np.abs(b))
 
 
 def error_bound_group_ef(a: np.ndarray, b: np.ndarray, k: int,
-                         u: float | None = None) -> np.ndarray:
+                         u: float | None = None,
+                         delta: float = 0.0) -> np.ndarray:
     """Bound for Alg. 3+6: |AB - T| <= 4(k+1) n 2^(-beta k) g f^T + (w-1) u |A||B|."""
     u = u if u is not None else unit_roundoff(a.dtype)
     n = a.shape[1]
     beta = compute_beta(n)
     w = accumulation_terms_w(k, compute_r(n, beta))
-    return truncation_bound(a, b, k) + max(w - 1, 0) * u * (np.abs(a) @ np.abs(b))
+    adds = effective_terms(max(w - 1, 0), delta)
+    return truncation_bound(a, b, k, delta=delta) \
+        + adds * u * (np.abs(a) @ np.abs(b))
 
 
 def error_bound_rn(a: np.ndarray, b: np.ndarray, k: int,
-                   u: float | None = None) -> np.ndarray:
+                   u: float | None = None,
+                   delta: float = 0.0) -> np.ndarray:
     """Documented bound for the RN variants (ozIMMU_RN / ozIMMU_H).
 
     Same shape as eq. (18) with the grid anchored at ``2^ceil(log2 max)``
@@ -88,12 +166,15 @@ def error_bound_rn(a: np.ndarray, b: np.ndarray, k: int,
     u = u if u is not None else unit_roundoff(a.dtype)
     n = a.shape[1]
     beta = compute_beta(n)
-    tb = 4.0 * (k + 1) * n * 2.0 ** (-beta * k) * (2.0 * _gf(a, b))
-    return tb + (k * (k + 1) / 2) * u * (np.abs(a) @ np.abs(b))
+    tb = 4.0 * (k + 1) * effective_terms(n, delta) \
+        * 2.0 ** (-beta * k) * (2.0 * _gf(a, b))
+    adds = effective_terms(k * (k + 1) / 2, delta)
+    return tb + adds * u * (np.abs(a) @ np.abs(b))
 
 
 def error_bound_sm(a: np.ndarray, b: np.ndarray, k: int,
-                   u: float | None = None) -> np.ndarray:
+                   u: float | None = None,
+                   delta: float = 0.0) -> np.ndarray:
     """Documented bound for the sign-magnitude variants (ozimmu_sm_b/_h).
 
     The splitter anchors each row at ``anchor_i = 2 ufp(rowmax_i)`` (so
@@ -117,8 +198,10 @@ def error_bound_sm(a: np.ndarray, b: np.ndarray, k: int,
     u = u if u is not None else unit_roundoff(a.dtype)
     n = a.shape[1]
     beta = compute_beta_sm(n)
-    tb = 8.0 * (k + 1) * n * 2.0 ** (-beta * k) * _gf(a, b)
-    return tb + (k * (k + 1) / 2) * u * (np.abs(a) @ np.abs(b))
+    tb = 8.0 * (k + 1) * effective_terms(n, delta) \
+        * 2.0 ** (-beta * k) * _gf(a, b)
+    adds = effective_terms(k * (k + 1) / 2, delta)
+    return tb + adds * u * (np.abs(a) @ np.abs(b))
 
 
 def _global_anchor(x: np.ndarray) -> float:
@@ -146,7 +229,8 @@ def _row_anchor(x: np.ndarray, axis: int) -> np.ndarray:
 def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
                     fast: bool | str = True, u: float | None = None,
                     adds: int | None = None,
-                    fast2: bool = False) -> np.ndarray:
+                    fast2: bool = False,
+                    delta: float = 0.0) -> np.ndarray:
     """Documented elementwise bound for the oz2 (constant-scaling) modes.
 
     With the shared grids anchored at ``EA = 2^ceil(log2 max|A|)`` (resp.
@@ -195,11 +279,17 @@ def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
     else:
         ea, eb = _global_anchor(a), _global_anchor(b)
     t = 2.0 ** (-beta * k)
+    n_eff = effective_terms(n, delta)
     colsum = np.sum(np.abs(b), axis=0)
     rowsum = np.sum(np.abs(a), axis=1)
-    trunc = 4.0 * t * (ea * colsum[None, :] + rowsum[:, None] * eb
-                       + n * ea * eb)
-    dropped = 8.0 * k * n * t * ea * eb if fast else 0.0
+    # each of the three truncation contributions and the dropped band is
+    # an n-term sum of bounded residual products, so the probabilistic
+    # model replaces its n factor (explicit in the n*EA*EB / dropped
+    # terms, inside colsum/rowsum for the cross terms — rescaled by
+    # n_eff/n there) by effective_terms(n, delta).
+    trunc = 4.0 * t * ((ea * colsum[None, :] + rowsum[:, None] * eb)
+                       * (n_eff / n) + n_eff * ea * eb)
+    dropped = 8.0 * k * n_eff * t * ea * eb if fast else 0.0
     if adds is None:
         # conservative default: count the ladder windows of the WORST
         # configuration — truncation digit bits (smaller r, more chunks)
@@ -210,9 +300,56 @@ def error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
         r = compute_r(n, beta, beta)
         adds = oz2_num_highprec_adds(k, r, beta, n, fast, beta,
                                      word_bits=31)
-    accum = (max(adds - 1, 0) * u * (np.abs(a) @ np.abs(b))
-             + 4.0 * adds * n * u * ea * eb)
+    accum = (effective_terms(max(adds - 1, 0), delta) * u
+             * (np.abs(a) @ np.abs(b))
+             + 4.0 * effective_terms(adds, delta) * n_eff * u * ea * eb)
     return trunc + dropped + accum
+
+
+def prob_error_bound_ozimmu(a: np.ndarray, b: np.ndarray, k: int,
+                            delta: float = DEFAULT_DELTA,
+                            u: float | None = None) -> np.ndarray:
+    """Probabilistic twin of :func:`error_bound_ozimmu` (arXiv 2506.11277
+    model; per-entry failure probability <= ``delta``).  ``delta=0``
+    recovers the deterministic bound bitwise."""
+    return error_bound_ozimmu(a, b, k, u=u, delta=delta)
+
+
+def prob_error_bound_group_ef(a: np.ndarray, b: np.ndarray, k: int,
+                              delta: float = DEFAULT_DELTA,
+                              u: float | None = None) -> np.ndarray:
+    """Probabilistic twin of :func:`error_bound_group_ef`."""
+    return error_bound_group_ef(a, b, k, u=u, delta=delta)
+
+
+def prob_error_bound_rn(a: np.ndarray, b: np.ndarray, k: int,
+                        delta: float = DEFAULT_DELTA,
+                        u: float | None = None) -> np.ndarray:
+    """Probabilistic twin of :func:`error_bound_rn` — the sharp case of
+    the model: half-ulp RN slice roundings are symmetric and
+    mean-independent, exactly the 2506.11277 hypothesis."""
+    return error_bound_rn(a, b, k, u=u, delta=delta)
+
+
+def prob_error_bound_sm(a: np.ndarray, b: np.ndarray, k: int,
+                        delta: float = DEFAULT_DELTA,
+                        u: float | None = None) -> np.ndarray:
+    """Probabilistic twin of :func:`error_bound_sm`.  Holds under the
+    random-operand model (symmetric signs re-center the one-sided floor
+    truncations); the planner charges a calibrated bias for this split
+    on top (``repro.core.plan``)."""
+    return error_bound_sm(a, b, k, u=u, delta=delta)
+
+
+def prob_error_bound_oz2(a: np.ndarray, b: np.ndarray, k: int,
+                         fast: bool | str = True,
+                         delta: float = DEFAULT_DELTA,
+                         u: float | None = None,
+                         adds: int | None = None,
+                         fast2: bool = False) -> np.ndarray:
+    """Probabilistic twin of :func:`error_bound_oz2`."""
+    return error_bound_oz2(a, b, k, fast=fast, u=u, adds=adds,
+                           fast2=fast2, delta=delta)
 
 
 def flop_counts(m: int, n: int, p: int, k: int, *, group_ef: bool,

@@ -9,7 +9,12 @@ Specs (CLI flag ``--matmul_engine``):
     ``k`` may be ``auto``: the execution planner (``repro.core.plan``)
     picks the smallest slice count meeting ``OzimmuConfig.target_eps``
     from the operands' probed exponent ranges (eager calls) or the
-    static mantissa-coverage plan (inside jit).
+    static mantissa-coverage plan (inside jit).  ``...:prob`` (auto-k
+    specs only, every variant) plans under the probabilistic eps model
+    instead of the worst-case one — same target, failure probability
+    ``target_delta`` (default 2^-20), strictly-no-larger (typically
+    smaller) resolved k — see
+    docs/algorithms.md#the-probabilistic-planner-prob.
   * ``ozimmu_sm_b[-k]``, ``ozimmu_sm_h[-k]`` — sign-magnitude slicing:
     unsigned magnitude digits with the sign folded into the leading
     slice, so trailing slices spend no sign bit and the grid widens to

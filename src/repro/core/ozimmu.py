@@ -113,6 +113,18 @@ class OzimmuConfig:
     target_eps: Optional[float] = None
                                     # auto-k error target; None = the
                                     # planner default (~f64-faithful)
+    target_eps_mode: str = "deterministic"
+                                    # "deterministic" (worst-case eq.18
+                                    # bit model) | "probabilistic" (spec
+                                    # token ``:prob``: the 2506.11277
+                                    # concentration model — smaller
+                                    # auto-k at failure probability
+                                    # target_delta; core/plan.py)
+    target_delta: Optional[float] = None
+                                    # probabilistic-mode per-entry failure
+                                    # probability; None = the analysis
+                                    # default (2^-20); <= 0 recovers the
+                                    # deterministic planner exactly
     mesh_axis: Optional[str] = None  # mesh-native contraction sharding axis
     mesh_reduce: str = "int32"      # int32 (exact product psum) | df32
                                     # (compensated partial-accumulator psum)
@@ -179,11 +191,13 @@ def parse_spec(spec: str) -> OzimmuConfig:
     an integer or ``auto`` (per-contraction accuracy-driven slice count,
     core/plan.py) and each ``:opt`` is an accumulator dtype
     (``f64``/``f32``/``df32``), ``fused`` (the one-HBM-pass Pallas
-    pipeline), or — for the ``oz2_*`` variants only — ``fast`` (evaluate
-    the anti-diagonal band s + t <= k + 1 instead of all k^2 slice pairs)
-    or ``fast2`` (the same band under the improved per-row equilibrated
-    scaling — near-full-mode accuracy at fast-mode cost; mutually
-    exclusive with ``fast``).
+    pipeline), ``prob`` (auto-k specs only, any variant: resolve k under
+    the probabilistic eps model — ``target_eps_mode="probabilistic"``,
+    core/plan.py), or — for the ``oz2_*`` variants only — ``fast``
+    (evaluate the anti-diagonal band s + t <= k + 1 instead of all k^2
+    slice pairs) or ``fast2`` (the same band under the improved per-row
+    equilibrated scaling — near-full-mode accuracy at fast-mode cost;
+    mutually exclusive with ``fast``).
     E.g. ``"ozimmu_h-auto:df32:fused@model"`` runs the fused pipeline,
     contraction-sharded over the ``model`` mesh axis with the exact int32
     cross-device reduction, with auto-planned k; ``"oz2_h-auto:fast"``
@@ -203,7 +217,7 @@ def parse_spec(spec: str) -> OzimmuConfig:
         if mesh_reduce not in _MESH_REDUCES:
             raise ValueError(f"unknown mesh reduce {mesh_reduce!r}; "
                              f"options: {_MESH_REDUCES}")
-    accum_dtype, use_pallas, fast = "f64", False, False
+    accum_dtype, use_pallas, fast, prob = "f64", False, False, False
     spec, *opts = spec.split(":")
     seen_accum = False
     for opt in opts:
@@ -216,6 +230,10 @@ def parse_spec(spec: str) -> OzimmuConfig:
             if use_pallas == "fused":
                 raise ValueError("duplicate 'fused' token in engine spec")
             use_pallas = "fused"
+        elif opt == "prob":
+            if prob:
+                raise ValueError("duplicate 'prob' token in engine spec")
+            prob = True
         elif opt in ("fast", "fast2"):
             if fast == (opt if opt == "fast2" else True):
                 raise ValueError(f"duplicate {opt!r} token in engine spec")
@@ -227,7 +245,8 @@ def parse_spec(spec: str) -> OzimmuConfig:
             fast = "fast2" if opt == "fast2" else True
         else:
             raise ValueError(f"unknown engine spec option {opt!r}; "
-                             f"options: f64, f32, df32, fused, fast, fast2")
+                             f"options: f64, f32, df32, fused, fast, "
+                             f"fast2, prob")
     name, _, kstr = spec.partition("-")
     if name not in VARIANTS:
         raise ValueError(f"unknown ozimmu variant {name!r}; "
@@ -242,11 +261,18 @@ def parse_spec(spec: str) -> OzimmuConfig:
         raise ValueError(f"the {token!r} token applies to the oz2_* "
                          f"variants only (the ozimmu family always "
                          f"evaluates the fast-mode band); got {name!r}")
+    if prob and not auto_k:
+        raise ValueError(f"the 'prob' token (probabilistic "
+                         f"target_eps_mode) applies to auto-k specs only "
+                         f"— a fixed slice count leaves the planner "
+                         f"nothing to resolve; got {name!r} with "
+                         f"k={kstr or cfg.k}, want e.g. {name}-auto:prob")
     return canonical_fast2(cfg.with_(
         k=cfg.k if (auto_k or not kstr) else int(kstr),
         auto_k=auto_k, accum_dtype=accum_dtype,
-        use_pallas=use_pallas, fast=fast, mesh_axis=mesh_axis,
-        mesh_reduce=mesh_reduce))
+        use_pallas=use_pallas, fast=fast,
+        target_eps_mode="probabilistic" if prob else "deterministic",
+        mesh_axis=mesh_axis, mesh_reduce=mesh_reduce))
 
 
 def split_operands(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,

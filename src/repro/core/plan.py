@@ -37,6 +37,40 @@ static, shape-only plan that covers the input mantissa
 paper's "emulate the input precision faithfully" posture.  Exponents come
 from ``frexp`` as everywhere else in the repo (no float ``log2``).
 
+**Probabilistic mode** (``OzimmuConfig.target_eps_mode="probabilistic"``,
+spec token ``:prob``): the bit model above is worst-case in two places
+that the probabilistic analysis of arXiv 2506.11277
+(``analysis.prob_error_bound_*``) tightens with probability
+``1 - delta`` (``delta`` = ``OzimmuConfig.target_delta``, default
+:data:`repro.core.analysis.DEFAULT_DELTA` = 2^-20):
+
+* probed path: the ``ceil(log2(m p))`` min-|c| cancellation charge is an
+  order statistic of ~``m p`` near-independent CLT-scale entries; its
+  tail is covered by half the bits plus the concentration constant
+  ``lambda_bits(delta) = ceil(log2 sqrt(2 ln(2/delta)))`` (3 bits at the
+  default delta), so the term becomes
+  ``(clog2(m p) + 1)//2 + lambda_bits(delta) + bias``;
+* static path: instead of charging worst-case n-growth
+  (``ceil(log2 n)``) on top of mantissa coverage, the truncation sum
+  concentrates like ``lambda sqrt(n)`` — matching the reference
+  product's own accumulated-rounding growth — and the static charge
+  collapses to ``max(lambda_bits(delta), guard) + extra + bias``.
+
+``bias`` is a calibrated per-family charge-back for the
+directed-truncation splits whose residuals are NOT mean-zero (the
+2506.11277 hypothesis): 1 bit for the bitmask splits, 3 for
+sign-magnitude (one-sided floor extraction plus the sign-folding
+cascade correlating residuals within a row).  Both probabilistic
+``needed`` values are clamped to never exceed the deterministic ones,
+so ``k_prob <= k_det`` structurally; the dd oracle
+(``tests/test_oracle.py -k prob``) calibrates the constants against
+seeded ensembles at the claimed failure rate.  The static probabilistic
+plan intentionally under-delivers an absolute 2^-40 target (it promises
+faithful-mantissa coverage plus the concentration margin, not target
+bits plus worst-case growth) — bounded by the shaved ``beta (k_det -
+k_prob)`` bits and documented in
+docs/algorithms.md#the-probabilistic-planner-prob.
+
 **Kernel block autotuning**: a small static table mapping problem dims to
 ``(bm, bn, bp)`` Pallas tile sizes, ``lru_cache``-d like the jitted sharded
 entry of ``core/ozimmu.py``, consumed by all three kernels through
@@ -60,16 +94,18 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.accumulate import (num_highprec_adds, oz2_num_highprec_adds,
                                    oz2_num_pairs)
+from repro.core.analysis import DEFAULT_DELTA
 from repro.core.splitting import beta_for, compute_r, digit_bits
 
-__all__ = ["DEFAULT_TARGET_EPS", "Plan", "plan_contraction", "auto_k",
-           "operand_gap_bits", "kernel_blocks", "tile", "describe_config"]
+__all__ = ["DEFAULT_TARGET_EPS", "DEFAULT_DELTA", "Plan",
+           "plan_contraction", "auto_k", "operand_gap_bits", "lambda_bits",
+           "kernel_blocks", "tile", "describe_config"]
 
 # ~f64-faithful: at or below the elementwise relative error a plain FP64
 # GEMM measures on the paper's phi-matrix grid (1e-11..7e-12 there), with
@@ -148,11 +184,34 @@ _SM_SPLITS = ("sm",)
 _OZ2_SPLITS = ("oz2_rn", "oz2_bitmask", "oz2_rn_fast2",
                "oz2_bitmask_fast2")
 
+_EPS_MODES = ("deterministic", "probabilistic")
+
+# Charge-back for splits whose truncation residuals are NOT mean-zero
+# (the concentration hypothesis): directed bitmask truncation biases one
+# ulp direction per element sign; sign-magnitude floor extraction is
+# one-sided AND its sign-folding cascade correlates residuals within a
+# row.  Calibrated against the adversarial planner grid of
+# tests/test_oracle.py (wide_spread / high-phi cells are where the
+# uncorrected sqrt-model first breaks).
+_PROB_BIAS_BITS = {"bitmask": 1, "oz2_bitmask": 1, "oz2_bitmask_fast2": 1,
+                   "sm": 3}
+
+
+def lambda_bits(delta: float) -> int:
+    """``ceil(log2 sqrt(2 ln(2/delta)))`` — the Hoeffding concentration
+    constant of the probabilistic eps model, in bits (3 at the default
+    delta = 2^-20)."""
+    if not (0.0 < delta < 1.0):
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    return max(1, int(math.ceil(
+        math.log2(math.sqrt(2.0 * math.log(2.0 / delta))))))
+
 
 def choose_k(n: int, beta: int, target_eps: float, *, split: str,
              mantissa: int, m: int = 1, p: int = 1,
              gap_a: Optional[int] = None, gap_b: Optional[int] = None,
-             fast: bool = False) -> int:
+             fast: Union[bool, str] = False, mode: str = "deterministic",
+             delta: Optional[float] = None) -> int:
     """Smallest k meeting ``target_eps`` under the bit model above.
 
     ``gap_a``/``gap_b`` are the probed operand exponent ranges; ``None``
@@ -165,8 +224,8 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
     Cauchy-Schwarz — so the two probed gaps combine as ``max``, not sum
     (docs/algorithms.md#ozaki-scheme-ii).  Fast mode charges one extra bit
     for the dropped g > k+1 groups (they sit at the truncation level).
-    The fast2 splits charge the same bit (``fast`` arrives as the bool of
-    the config's fast-mode flag): fast2's per-row-anchored error is
+    The fast2 splits charge the same bit (``fast`` arrives as the
+    config's raw fast-mode flag — a bool or ``"fast2"``): fast2's per-row-anchored error is
     elementwise <= the plain fast-mode error at equal k, so the resolved
     k is equal — never larger — and the ``target_eps`` guarantee carries
     over wherever plain fast mode met it.
@@ -177,18 +236,64 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
     at equal ``needed`` the resolved k is smaller: ``ceil((needed+2)/8)``
     vs ``ceil(needed/7)``, a strict win whenever needed >= ~50 (every f64
     target), the (k-1)-bit saving the family exists for.
+
+    ``mode="probabilistic"`` resolves k under the concentration model
+    (module docstring): the probed ``clog2(m p)`` charge becomes
+    ``(clog2(m p)+1)//2 + lambda_bits(delta) + bias`` and the static
+    plan covers ``mantissa + max(lambda_bits(delta), guard) + extra +
+    bias``; both are clamped to the deterministic ``needed`` so the
+    resolved k never exceeds the deterministic one.  ``delta=None``
+    uses :data:`repro.core.analysis.DEFAULT_DELTA`; ``delta <= 0``
+    recovers deterministic planning exactly.
     """
-    guard = _GUARD_BITS + (_TRUNC_EXTRA_BITS if split in _TRUNC_SPLITS
-                           else _SM_EXTRA_BITS if split in _SM_SPLITS
-                           else 0)
+    if mode not in _EPS_MODES:
+        raise ValueError(
+            f"target_eps_mode must be one of {_EPS_MODES}, got {mode!r}")
+    extra = (_TRUNC_EXTRA_BITS if split in _TRUNC_SPLITS
+             else _SM_EXTRA_BITS if split in _SM_SPLITS else 0)
+    guard = _GUARD_BITS + extra
+    # probabilistic mode with delta <= 0 is the deterministic limit
+    prob = mode == "probabilistic"
+    if prob:
+        delta = DEFAULT_DELTA if delta is None else delta
+        if delta <= 0.0:
+            prob = False
+    # Plain oz2 fast mode (global anchor) gets NO probabilistic shave:
+    # its dropped g > k+1 band is a systematic truncation of whole
+    # slice-group products against the matrix-level anchor — not
+    # mean-zero rounding noise, so the concentration argument does not
+    # apply (and the deterministic fast-mode plan is already marginal on
+    # wide-phi operands).  fast2's per-row equilibration re-anchors the
+    # band at the row scale, restoring the concentration headroom.
+    # ``fast`` may arrive as the raw config flag (bool or "fast2") or a
+    # bool from a non-canonicalized config, so check both spellings.
+    is_fast2 = fast == "fast2" or split.endswith("_fast2")
+    if prob and bool(fast) and split in _OZ2_SPLITS and not is_fast2:
+        prob = False
+    lam = lambda_bits(delta) if prob else 0
+    bias = _PROB_BIAS_BITS.get(split, 0) if prob else 0
     if gap_a is None or gap_b is None:
         needed = mantissa + _clog2(n) + guard
-    elif split in _OZ2_SPLITS:
-        needed = (_bits_of(target_eps) + max(gap_a, gap_b) + int(fast)
-                  + _clog2(m * p) + (_clog2(n) + 1) // 2 + guard)
+        if prob:
+            # static: mantissa coverage + concentration margin (which
+            # subsumes the base carry guard) + family extras + bias,
+            # instead of worst-case n-growth
+            needed = min(needed,
+                         mantissa + max(lam, _GUARD_BITS) + extra + bias)
     else:
-        needed = (_bits_of(target_eps) + gap_a + gap_b
-                  + _clog2(m * p) + (_clog2(n) + 1) // 2 + guard)
+        if split in _OZ2_SPLITS:
+            gaps = max(gap_a, gap_b) + int(bool(fast))
+        else:
+            gaps = gap_a + gap_b
+        mp_term = _clog2(m * p)
+        needed = (_bits_of(target_eps) + gaps + mp_term
+                  + (_clog2(n) + 1) // 2 + guard)
+        if prob:
+            # probed: the min-|c| order-statistic charge concentrates
+            mp_prob = (mp_term + 1) // 2 + lam + bias
+            needed = min(needed,
+                         _bits_of(target_eps) + gaps + mp_prob
+                         + (_clog2(n) + 1) // 2 + guard)
     return _clamp_k(-(-needed // beta))
 
 
@@ -280,7 +385,9 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
         probed = True
     k = choose_k(n, beta, eps, split=cfg.split, mantissa=mantissa,
                  m=m, p=p, gap_a=gap_a, gap_b=gap_b,
-                 fast=bool(getattr(cfg, "fast", False)))
+                 fast=getattr(cfg, "fast", False),
+                 mode=getattr(cfg, "target_eps_mode", "deterministic"),
+                 delta=getattr(cfg, "target_delta", None))
     base = _plan_static(n, m, p, k, beta, *_cfg_cost_key(cfg, beta))
     return dataclasses.replace(base, probed=probed)
 
@@ -348,7 +455,10 @@ def describe_config(cfg, m: int = 4096, n: int = 4096, p: int = 4096) -> str:
     """One-line human plan summary for an engine config (launch logging)."""
     pl = plan_contraction(cfg, m, n, p)
     eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
-    kpart = (f"k=auto(target_eps={eps:.1e}, static {pl.k} @ n={n})"
+    prob = getattr(cfg, "target_eps_mode", "deterministic") \
+        == "probabilistic"
+    kpart = (f"k=auto({'prob ' if prob else ''}target_eps={eps:.1e}, "
+             f"static {pl.k} @ n={n})"
              if getattr(cfg, "auto_k", False) else f"k={cfg.k}")
     fused = cfg.use_pallas == "fused"
     fast = getattr(cfg, "fast", False)

@@ -69,6 +69,10 @@ def resolved_k(cfg, n: int, dtype) -> int:
     static mantissa-coverage plan of ``repro.core.plan.choose_k`` with no
     probed operand gaps — identical to what ``plan.auto_k`` returns for
     tracers, so a cached split and the uncached jitted path agree on k.
+    ``target_eps_mode`` rides along: a ``:prob`` config resolves the
+    probabilistic static plan's (smaller) k, and because the resolved k
+    is part of :func:`_cfg_key`, its entries never alias a deterministic
+    plan's entries at a different k.
     """
     if not getattr(cfg, "auto_k", False):
         return cfg.k
@@ -78,7 +82,10 @@ def resolved_k(cfg, n: int, dtype) -> int:
                          cfg.target_eps if cfg.target_eps is not None
                          else plan.DEFAULT_TARGET_EPS,
                          split=cfg.split, mantissa=mantissa,
-                         fast=bool(getattr(cfg, "fast", False)))
+                         fast=getattr(cfg, "fast", False),
+                         mode=getattr(cfg, "target_eps_mode",
+                                      "deterministic"),
+                         delta=getattr(cfg, "target_delta", None))
 
 
 def presplit_rhs(b: jax.Array, dimension_numbers, cfg) -> Split:

@@ -1,0 +1,139 @@
+"""Failure paths of the benchmark regression gate
+(``benchmarks/run.py --check-against``).
+
+The gate is CI's only eye on the committed trajectory artifact, so its
+*failure* behavior is what matters: a headline row unknown to the
+artifact must be a hard failure (an ungated row is a row whose
+regressions CI can't see), with ``--allow-new-rows`` as the explicit
+escape hatch, and the ``prob_auto`` planner-economy rows must be gated
+on error, resolved k, and det-twin economy.  Pure dict plumbing — no
+benches run here.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def _summary(err=None, prob_rows=None, extra_benches=()):
+    headline = {"phi": 2.0, "k": 8,
+                "err": dict(err or {"ozimmu": 1e-10, "ozimmu_h": 1e-11}),
+                "err_fp64": 7e-12}
+    if prob_rows is not None:
+        headline["prob_auto"] = {"phi": 2.0, "rows": prob_rows}
+    benches = {"accuracy": {"status": "ok", "seconds": 1.0,
+                            "headline": headline}}
+    for name in extra_benches:
+        benches[name] = {"status": "ok", "seconds": 1.0, "headline": {}}
+    return {"schema_version": 2, "quick": True, "only": sorted(benches),
+            "benches": benches}
+
+
+PROB_ROW = {"k": 9, "err": 3e-15, "int8_gemms": 45,
+            "k_det": 10, "err_det": 2e-16, "gemms_det": 55}
+
+
+@pytest.fixture
+def committed(tmp_path):
+    """A committed artifact with one prob_auto row; returns (path, dict)."""
+    art = _summary(prob_rows={"ozimmu_h_auto_prob": dict(PROB_ROW)})
+    path = tmp_path / "BENCH_ref.json"
+    path.write_text(json.dumps(art))
+    return str(path), art
+
+
+def _gate(summary, committed_path, **kw):
+    return bench_run.check_against(summary, committed_path, **kw)
+
+
+def test_gate_passes_on_identical_summary(committed):
+    path, art = committed
+    assert _gate(copy.deepcopy(art), path) == []
+
+
+def test_unknown_err_row_is_hard_failure(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    got["benches"]["accuracy"]["headline"]["err"]["brand_new"] = 1e-12
+    failures = _gate(got, path)
+    assert any("brand_new" in f and "absent from the committed" in f
+               for f in failures), failures
+    # the escape hatch tolerates the new row
+    assert _gate(got, path, allow_new_rows=True) == []
+
+
+def test_unknown_prob_auto_row_is_hard_failure(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    got["benches"]["accuracy"]["headline"]["prob_auto"]["rows"][
+        "oz2_h_fast2_auto_prob"] = dict(PROB_ROW)
+    failures = _gate(got, path)
+    assert any("oz2_h_fast2_auto_prob" in f for f in failures), failures
+    assert _gate(got, path, allow_new_rows=True) == []
+
+
+def test_missing_committed_rows_still_fail(committed):
+    """The pre-existing direction: committed rows absent from the run."""
+    path, art = committed
+    got = copy.deepcopy(art)
+    del got["benches"]["accuracy"]["headline"]["err"]["ozimmu_h"]
+    del got["benches"]["accuracy"]["headline"]["prob_auto"]["rows"][
+        "ozimmu_h_auto_prob"]
+    failures = _gate(got, path)
+    assert any("'ozimmu_h' missing" in f for f in failures), failures
+    assert any("'ozimmu_h_auto_prob' missing" in f
+               for f in failures), failures
+    # allow_new_rows must NOT excuse missing rows — it is one-directional
+    assert _gate(got, path, allow_new_rows=True) == failures
+
+
+def test_prob_auto_err_regression_fails(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    row = got["benches"]["accuracy"]["headline"]["prob_auto"]["rows"][
+        "ozimmu_h_auto_prob"]
+    row["err"] = PROB_ROW["err"] * 10  # > 2x tol
+    failures = _gate(got, path)
+    assert any("exceeds 2.0x committed" in f and "prob_auto" in f
+               for f in failures), failures
+
+
+def test_prob_auto_k_regression_fails(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    row = got["benches"]["accuracy"]["headline"]["prob_auto"]["rows"][
+        "ozimmu_h_auto_prob"]
+    row["k"] = PROB_ROW["k"] + 1  # above committed -> planner regression
+    failures = _gate(got, path)
+    assert any("above committed" in f for f in failures), failures
+
+
+def test_prob_auto_economy_violation_fails(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    row = got["benches"]["accuracy"]["headline"]["prob_auto"]["rows"][
+        "ozimmu_h_auto_prob"]
+    # k at the det twin's +1 and more GEMMs than det: both economy checks
+    row["k"] = row["k_det"] + 1
+    row["int8_gemms"] = row["gemms_det"] + 1
+    failures = _gate(got, path)
+    assert any("planner economy violated" in f for f in failures), failures
+    assert any("int8_gemms" in f and "deterministic twin" in f
+               for f in failures), failures
+
+
+def test_failed_bench_status_fails(committed):
+    path, art = committed
+    got = copy.deepcopy(art)
+    got["benches"]["breakdown"] = {"status": "failed",
+                                   "error": "RuntimeError('boom')"}
+    failures = _gate(got, path)
+    assert any("breakdown" in f and "failed" in f for f in failures)
+
+
+def test_cli_wires_allow_new_rows():
+    ap = bench_run._build_parser()
+    assert ap.parse_args([]).allow_new_rows is False
+    assert ap.parse_args(["--allow-new-rows"]).allow_new_rows is True

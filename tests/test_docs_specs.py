@@ -69,8 +69,9 @@ def test_docs_quote_enough_specs():
             "ozimmu_h-auto:df32:fused", "oz2_h-auto:fast",
             "oz2_h-auto:fast2", "oz2_b-8:df32@model",
             "ozimmu_sm_h-auto:df32", "ozimmu_sm_b-8",
-            "ozimmu_sm_h-8:df32:fused@model/int32"} <= specs, specs
-    assert len(specs) >= 11, specs
+            "ozimmu_sm_h-8:df32:fused@model/int32",
+            "ozimmu_h-auto:prob", "oz2_h-auto:fast2:prob"} <= specs, specs
+    assert len(specs) >= 13, specs
 
 
 @pytest.mark.parametrize("rel,spec", SPECS,
@@ -122,6 +123,25 @@ def test_fast2_spec_round_trips():
     assert parse_spec("oz2_b-auto:fast2:df32").split == "oz2_bitmask_fast2"
     make_engine("oz2_h-auto:fast2")
     make_engine("oz2_h-8:fast2:fused@model/int32")
+
+
+def test_prob_token_rejected_without_auto():
+    """`:prob` applies to auto-k specs only; on a fixed-k spec the
+    ValueError names the token (the grammar note in docs/engine.md)."""
+    for spec in ("ozimmu_h-8:prob", "oz2_h-4:fast2:prob",
+                 "ozimmu_sm_h:prob"):
+        with pytest.raises(ValueError, match="'prob'"):
+            make_engine(spec)
+
+
+def test_prob_specs_round_trip():
+    """The documented :prob specs build engines whose configs carry the
+    probabilistic eps mode (the when-to-use rows in docs/engine.md)."""
+    from repro.core.ozimmu import parse_spec
+    for spec in ("ozimmu_h-auto:prob", "oz2_h-auto:fast2:prob"):
+        cfg = parse_spec(spec)
+        assert cfg.auto_k and cfg.target_eps_mode == "probabilistic", spec
+        make_engine(spec)
 
 
 def test_sm_specs_round_trip():

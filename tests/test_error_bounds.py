@@ -1,6 +1,8 @@
 """§5 rounding-error-analysis validation: computed results must satisfy the
 paper's deterministic bounds, and the group-EF accounting (w, r) must match
 the implementation's actual operation counts."""
+import math
+
 import numpy as np
 import pytest
 
@@ -114,3 +116,135 @@ def test_fp64_crossing_rn_one_slice_earlier(rng):
     k_bitmask = crossing("ozimmu")
     k_h = crossing("ozimmu_h")
     assert k_h <= k_bitmask, (k_h, k_bitmask)
+
+
+# ---------------------------------------------------------------------------
+# probabilistic bounds (prob_error_bound_*) — property tests
+# ---------------------------------------------------------------------------
+
+from tests.conftest import hypothesis_or_stubs  # noqa: E402
+
+given, settings, st = hypothesis_or_stubs()
+
+_PROB_BOUNDS = {
+    "ozimmu": lambda a, b, k, d: analysis.prob_error_bound_ozimmu(
+        a, b, k, delta=d),
+    "ozimmu_rn": lambda a, b, k, d: analysis.prob_error_bound_rn(
+        a, b, k, delta=d),
+    "ozimmu_ef": lambda a, b, k, d: analysis.prob_error_bound_group_ef(
+        a, b, k, delta=d),
+    "ozimmu_h": lambda a, b, k, d: analysis.prob_error_bound_rn(
+        a, b, k, delta=d),
+    "ozimmu_sm_b": lambda a, b, k, d: analysis.prob_error_bound_sm(
+        a, b, k, delta=d),
+    "ozimmu_sm_h": lambda a, b, k, d: analysis.prob_error_bound_sm(
+        a, b, k, delta=d),
+    "oz2_b": lambda a, b, k, d: analysis.prob_error_bound_oz2(
+        a, b, k, fast=True, delta=d),
+    "oz2_h": lambda a, b, k, d: analysis.prob_error_bound_oz2(
+        a, b, k, fast=True, delta=d),
+}
+
+_DET_BOUNDS = {
+    "ozimmu": lambda a, b, k: analysis.error_bound_ozimmu(a, b, k),
+    "ozimmu_rn": lambda a, b, k: analysis.error_bound_rn(a, b, k),
+    "ozimmu_ef": lambda a, b, k: analysis.error_bound_group_ef(a, b, k),
+    "ozimmu_h": lambda a, b, k: analysis.error_bound_rn(a, b, k),
+    "ozimmu_sm_b": lambda a, b, k: analysis.error_bound_sm(a, b, k),
+    "ozimmu_sm_h": lambda a, b, k: analysis.error_bound_sm(a, b, k),
+    "oz2_b": lambda a, b, k: analysis.error_bound_oz2(a, b, k, fast=True),
+    "oz2_h": lambda a, b, k: analysis.error_bound_oz2(a, b, k, fast=True),
+}
+
+
+def _prob_case(rng, dtype, n=48, m=24, p=12, phi=1.0):
+    a = make_phi_matrix(rng, m, n, phi).astype(dtype)
+    b = make_phi_matrix(rng, n, p, phi).astype(dtype)
+    return a, b
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("variant", sorted(_PROB_BOUNDS))
+def test_prob_bound_delta_zero_is_deterministic_bitwise(rng, variant,
+                                                        dtype):
+    """For every variant x dtype, ``prob_error_bound(..., delta=0)``
+    equals the deterministic bound BITWISE (the delta=0 limit evaluates
+    the identical float expressions)."""
+    a, b = _prob_case(rng, dtype)
+    for k in (2, 5, 8, 12):
+        d0 = _PROB_BOUNDS[variant](a, b, k, 0.0)
+        det = _DET_BOUNDS[variant](a, b, k)
+        assert d0.dtype == det.dtype
+        assert np.array_equal(d0, det), (variant, k)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("variant", sorted(_PROB_BOUNDS))
+def test_prob_bound_monotone_in_delta(rng, variant, dtype):
+    """The bound is monotone non-increasing in delta: more admitted
+    failure probability never widens the bound (and the default-delta
+    bound never exceeds the deterministic one)."""
+    a, b = _prob_case(rng, dtype)
+    k = 8
+    deltas = (0.0, 2.0 ** -200, 2.0 ** -60, 2.0 ** -20, 2.0 ** -5, 0.5)
+    prev = None
+    for d in deltas:
+        cur = _PROB_BOUNDS[variant](a, b, k, d)
+        if prev is not None:
+            assert np.all(cur <= prev), (variant, d)
+        prev = cur
+
+
+@pytest.mark.parametrize("variant", sorted(_PROB_BOUNDS))
+def test_prob_truncation_monotone_in_k(rng, variant):
+    """The truncation component is non-decreasing in k-truncation:
+    truncating MORE slices (smaller k) never shrinks the bound, at every
+    delta — so the planner's smallest-k-meeting-eps search is
+    well-posed against the probabilistic model too."""
+    a, b = _prob_case(rng, np.float64)
+    # evaluate with the accumulation term suppressed (u=0): what remains
+    # is the truncation/dropped-band part, the k-truncation component
+    prob = {
+        "ozimmu": lambda k, d: analysis.prob_error_bound_ozimmu(
+            a, b, k, delta=d, u=0.0),
+        "ozimmu_rn": lambda k, d: analysis.prob_error_bound_rn(
+            a, b, k, delta=d, u=0.0),
+        "ozimmu_ef": lambda k, d: analysis.prob_error_bound_group_ef(
+            a, b, k, delta=d, u=0.0),
+        "ozimmu_h": lambda k, d: analysis.prob_error_bound_rn(
+            a, b, k, delta=d, u=0.0),
+        "ozimmu_sm_b": lambda k, d: analysis.prob_error_bound_sm(
+            a, b, k, delta=d, u=0.0),
+        "ozimmu_sm_h": lambda k, d: analysis.prob_error_bound_sm(
+            a, b, k, delta=d, u=0.0),
+        "oz2_b": lambda k, d: analysis.prob_error_bound_oz2(
+            a, b, k, fast=True, delta=d, u=0.0),
+        "oz2_h": lambda k, d: analysis.prob_error_bound_oz2(
+            a, b, k, fast=True, delta=d, u=0.0),
+    }[variant]
+    for d in (0.0, 2.0 ** -20, 2.0 ** -5):
+        for k in range(3, 12):
+            assert np.all(prob(k - 1, d) >= prob(k, d)), (variant, k, d)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       k=st.integers(2, 14),
+       log2_delta=st.integers(-300, -1))
+def test_prob_effective_terms_properties(seed, k, log2_delta):
+    """effective_terms drives every prob bound; property-check it
+    directly: 0 <= eff <= count, eff(count, 0) == count exactly, eff is
+    non-increasing in delta and non-decreasing in count."""
+    gen = np.random.default_rng(seed)
+    count = int(gen.integers(1, 10_000))
+    delta = 2.0 ** log2_delta
+    eff = analysis.effective_terms(count, delta)
+    assert 0.0 < eff <= float(count)
+    assert analysis.effective_terms(count, 0.0) == float(count)
+    assert analysis.effective_terms(count, delta / 2.0) >= eff
+    assert analysis.effective_terms(count + 1, delta) >= eff
+    # lambda(delta) agreement: below the saturation point the ratio is
+    # exactly sqrt(2 ln(2/delta) / count)
+    lam = math.sqrt(2.0 * math.log(2.0 / delta))
+    assert eff == pytest.approx(min(float(count),
+                                    lam * math.sqrt(count)), rel=1e-12)

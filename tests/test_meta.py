@@ -1,0 +1,54 @@
+"""Suite meta-invariants: the committed tier-1 collected-count floor.
+
+``tests/tier1_floor.txt`` is the single source of the floor, consumed by
+BOTH the CI workflow step and this test — so the floor bumps in the same
+diff as the tests that moved it and can't silently drift from the
+workflow (the failure mode of the old hand-maintained number in ci.yml:
+a conftest/import error or refactor de-collecting part of the suite
+still shows a green run).
+"""
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FLOOR_FILE = os.path.join(REPO, "tests", "tier1_floor.txt")
+
+
+def read_floor() -> int:
+    with open(FLOOR_FILE) as f:
+        return int(f.read().strip())
+
+
+def test_floor_file_parses():
+    floor = read_floor()
+    # 407 was the last hand-maintained floor (sign-magnitude family PR);
+    # the committed file must never regress below it
+    assert floor >= 407
+
+
+def test_ci_workflow_reads_floor_file():
+    with open(os.path.join(REPO, ".github", "workflows", "ci.yml")) as f:
+        text = f.read()
+    assert "tests/tier1_floor.txt" in text, \
+        "ci.yml must read the floor from tests/tier1_floor.txt"
+    assert not re.search(r"-ge 407\b", text), \
+        "ci.yml still hardcodes the old floor instead of the file"
+
+
+def test_collected_count_meets_floor():
+    """The floor check itself, same scope as the workflow step (the
+    distributed suite runs in its own job and is excluded there too)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "--collect-only",
+         "-p", "no:cacheprovider", "--ignore=tests/test_distributed.py"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    m = re.search(r"^(\d+) tests collected", out.stdout, flags=re.M)
+    assert m, f"could not parse collected count from:\n{out.stdout[-2000:]}"
+    collected, floor = int(m.group(1)), read_floor()
+    assert collected >= floor, \
+        (f"collected {collected} tier-1 tests, floor is {floor} — if "
+         f"tests were removed on purpose, lower tests/tier1_floor.txt in "
+         f"the same change")

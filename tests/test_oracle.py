@@ -405,6 +405,250 @@ def test_oz2_spec_grammar():
 
 
 # ---------------------------------------------------------------------------
+# probabilistic planner (:prob) — grammar, economy, oracle calibration
+# ---------------------------------------------------------------------------
+
+# Specs the probabilistic calibration ensembles measure.  Plain :fast is
+# deliberately absent: the prob planner gives its global-anchor dropped
+# band no shave (choose_k), so :fast:prob plans are identical to :fast —
+# covered by test_prob_plain_fast_resolves_deterministic_k instead.
+_PROB_SPECS = ("ozimmu-auto:prob", "ozimmu_h-auto:prob",
+               "ozimmu_sm_h-auto:prob", "oz2_h-auto:prob",
+               "oz2_h-auto:fast2:prob")
+
+_PROB_DELTA = 2.0 ** -20  # analysis.DEFAULT_DELTA, pinned
+
+
+def _det_twin(spec):
+    return parse_spec(spec.replace(":prob", ""))
+
+
+def test_prob_spec_grammar():
+    cfg = parse_spec("ozimmu_h-auto:prob")
+    assert cfg.auto_k and cfg.target_eps_mode == "probabilistic"
+    assert cfg.target_delta is None  # None -> analysis.DEFAULT_DELTA
+    cfg2 = parse_spec("oz2_h-auto:fast2:prob:df32:fused@model")
+    assert cfg2.target_eps_mode == "probabilistic"
+    assert cfg2.split == "oz2_rn_fast2" and cfg2.fast == "fast2"
+    assert cfg2.accum_dtype == "df32" and cfg2.use_pallas == "fused"
+    assert cfg2.mesh_axis == "model"
+    # every variant family accepts :prob on auto-k specs
+    for name in sorted(VARIANTS):
+        assert parse_spec(f"{name}-auto:prob").target_eps_mode \
+            == "probabilistic"
+    assert parse_spec("ozimmu_h-auto").target_eps_mode == "deterministic"
+    from repro.core import make_engine
+    for bad in ("ozimmu_h-8:prob",       # fixed k leaves nothing to plan
+                "ozimmu_h:prob",         # default k is fixed k
+                "oz2_h-4:fast2:prob",
+                "ozimmu_h-auto:prob:prob"):
+        with pytest.raises(ValueError, match="'prob'|prob"):
+            make_engine(bad)
+
+
+def test_prob_auto_strictly_smaller_k_static():
+    """Acceptance: on the static n=96/128 bench-grid plans (what a jitted
+    serving call resolves), ``ozimmu_h-auto:prob`` and
+    ``oz2_h-auto:fast2:prob`` resolve STRICTLY smaller k — hence strictly
+    fewer int8 GEMMs per Plan accounting — than their deterministic twins
+    at the default target_eps; and no variant ever resolves a LARGER k
+    under the probabilistic model (the min-clamp in choose_k)."""
+    for spec in ("ozimmu_h-auto:prob", "oz2_h-auto:fast2:prob"):
+        cfg, cfg_det = parse_spec(spec), _det_twin(spec)
+        for n in (96, 128):
+            pp = plan.plan_contraction(cfg, n, n, n)
+            pd = plan.plan_contraction(cfg_det, n, n, n)
+            assert pp.k < pd.k, (spec, n, pp.k, pd.k)
+            assert pp.int8_gemms < pd.int8_gemms, (spec, n)
+            assert pp.highprec_adds <= pd.highprec_adds, (spec, n)
+    for name in sorted(VARIANTS):
+        for fast in _modes(name):
+            cfg_det = VARIANTS[name].with_(auto_k=True, fast=fast)
+            cfg = cfg_det.with_(target_eps_mode="probabilistic")
+            for n in (96, 128, 4096):
+                kp = plan.plan_contraction(cfg, n, n, n).k
+                kd = plan.plan_contraction(cfg_det, n, n, n).k
+                assert kp <= kd, (name, fast, n, kp, kd)
+
+
+def test_prob_planner_grid_guarantee():
+    """Probed path on the planner grid: every :prob spec resolves
+    ``k <= k_det`` (strictly smaller on the low-spread cells for
+    ozimmu_h), and the measured relative error (dd oracle) still meets
+    ``target_eps`` on every cell."""
+    eps = plan.DEFAULT_TARGET_EPS
+    strict_shaves = 0
+    for a, b, hi, lo in _planner_grid():
+        n = a.shape[0]
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for spec in _PROB_SPECS:
+            cfg, cfg_det = parse_spec(spec), _det_twin(spec)
+            pp = plan.plan_contraction(cfg, n, n, n, a=aj, b=bj)
+            pd = plan.plan_contraction(cfg_det, n, n, n, a=aj, b=bj)
+            assert pp.probed and pd.probed
+            assert pp.k <= pd.k, (spec, pp.k, pd.k)
+            if pp.k < pd.k:
+                strict_shaves += 1
+                assert pp.int8_gemms < pd.int8_gemms, spec
+            err = max_relative_error(
+                np.asarray(ozimmu_matmul(aj, bj, cfg)), hi, lo)
+            assert err <= eps, (spec, pp.k, err)
+    assert strict_shaves >= 3, strict_shaves
+
+
+def test_prob_plain_fast_resolves_deterministic_k():
+    """``oz2_h-auto:fast:prob`` plans exactly like ``oz2_h-auto:fast``:
+    the dropped-band term of the global-anchor fast mode is a systematic
+    truncation the concentration model must not shave."""
+    cfg = parse_spec("oz2_h-auto:fast:prob")
+    cfg_det = parse_spec("oz2_h-auto:fast")
+    for a, b, hi, lo in _planner_grid():
+        n = a.shape[0]
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        assert plan.plan_contraction(cfg, n, n, n, a=aj, b=bj).k \
+            == plan.plan_contraction(cfg_det, n, n, n, a=aj, b=bj).k
+    for n in (96, 128, 4096):
+        assert plan.plan_contraction(cfg, n, n, n).k \
+            == plan.plan_contraction(cfg_det, n, n, n).k
+
+
+def test_prob_delta_semantics():
+    """``target_delta`` wiring: delta <= 0 recovers the deterministic
+    plan exactly; shrinking delta never shrinks k (more confidence costs
+    bits); lambda_bits is the pinned concentration constant."""
+    assert plan.lambda_bits(_PROB_DELTA) == 3
+    assert plan.lambda_bits(0.5) >= 1
+    with pytest.raises(ValueError):
+        plan.lambda_bits(0.0)
+    cfg_det = parse_spec("ozimmu_h-auto")
+    cfg0 = parse_spec("ozimmu_h-auto:prob").with_(target_delta=0.0)
+    for n in (96, 128, 4096):
+        assert plan.plan_contraction(cfg0, n, n, n).k \
+            == plan.plan_contraction(cfg_det, n, n, n).k
+    ks = []
+    for delta in (2.0 ** -5, 2.0 ** -20, 2.0 ** -60, 2.0 ** -200):
+        cfg = parse_spec("ozimmu_h-auto:prob").with_(target_delta=delta)
+        ks.append(plan.plan_contraction(cfg, 128, 128, 128).k)
+    assert ks == sorted(ks), ks                  # smaller delta -> k up
+    assert ks[-1] <= plan.plan_contraction(cfg_det, 128, 128, 128).k
+
+
+def test_prob_split_cache_distinct_entries():
+    """A :prob config resolves a smaller static k than its deterministic
+    twin, and the two NEVER share a split-cache entry (k is part of the
+    cache key); the frozen k matches the jitted static plan on both."""
+    from repro.core.split_cache import SplitCache, resolved_k
+    rng = np.random.default_rng(20260806)
+    n, p = 128, 16
+    w = jnp.asarray(rng.standard_normal((n, p)))
+    cfg_det = parse_spec("ozimmu_h-auto")
+    cfg_prob = parse_spec("ozimmu_h-auto:prob")
+    kd = resolved_k(cfg_det, n, w.dtype)
+    kp = resolved_k(cfg_prob, n, w.dtype)
+    assert kp < kd, (kp, kd)
+    assert kp == plan.plan_contraction(cfg_prob, 1, n, p).k
+    assert kd == plan.plan_contraction(cfg_det, 1, n, p).k
+    cache = SplitCache()
+    dnums = (((1,), (0,)), ((), ()))
+    sp_det = cache.get(w, dnums, cfg_det)
+    sp_prob = cache.get(w, dnums, cfg_prob)
+    assert len(cache) == 2 and cache.stats.misses == 2
+    assert sp_det.digits.shape[0] == kd
+    assert sp_prob.digits.shape[0] == kp
+    # repeat lookups hit their own entries
+    assert cache.get(w, dnums, cfg_prob) is sp_prob
+    assert cache.get(w, dnums, cfg_det) is sp_det
+    assert cache.stats.hits == 2
+
+
+@pytest.mark.slow
+@pytest.mark.prob_calibration
+def test_prob_calibration_probed_ensemble():
+    """Oracle calibration of the probed probabilistic planner: over a
+    seeded 120-trial ensemble (n in {96, 128}; phi 0.5/1/2, wide-spread
+    8/12 and Gaussian operands; the five :prob calibration specs) the
+    measured relative error (dd reference) meets target_eps on >= the
+    claimed 1 - delta fraction of trials — with delta = 2^-20 and 120
+    trials, that is EVERY trial — and k_prob <= k_det on each."""
+    rng = np.random.default_rng(20260808)
+    eps = plan.DEFAULT_TARGET_EPS
+    trials, failures = 0, []
+    for n in (96, 128):
+        gens = [lambda: make_phi_matrix(rng, n, n, 0.5),
+                lambda: make_phi_matrix(rng, n, n, 1.0),
+                lambda: make_phi_matrix(rng, n, n, 2.0),
+                lambda: _wide_spread(rng, n, n, 8),
+                lambda: _wide_spread(rng, n, n, 12),
+                lambda: rng.standard_normal((n, n))]
+        for rep in range(2):
+            for gi, gen in enumerate(gens):
+                a, b = gen(), gen()
+                hi, lo = dd_matmul(a, b)
+                aj, bj = jnp.asarray(a), jnp.asarray(b)
+                for spec in _PROB_SPECS:
+                    cfg = parse_spec(spec)
+                    kp = plan.auto_k(aj, bj, cfg)
+                    kd = plan.auto_k(aj, bj, _det_twin(spec))
+                    assert kp <= kd, (spec, n, gi, kp, kd)
+                    err = max_relative_error(
+                        np.asarray(ozimmu_matmul(aj, bj, cfg)), hi, lo)
+                    trials += 1
+                    if err > eps:
+                        failures.append((spec, n, gi, rep, kp, err))
+    allowed = int(math.floor(trials * _PROB_DELTA))
+    assert len(failures) <= allowed, (trials, failures)
+
+
+@pytest.mark.slow
+@pytest.mark.prob_calibration
+def test_prob_calibration_static_bound_ensemble():
+    """Oracle calibration of the STATIC probabilistic plan (what jitted
+    serving calls resolve — k=8 at n=96/128 for the headline specs,
+    strictly below the deterministic k=9): the measured ELEMENTWISE
+    error stays under ``prob_error_bound_*(..., delta)`` on >= 1 - delta
+    of seeded trials (all of them here).  The absolute-relative
+    ``target_eps`` contract intentionally under-delivers on this path —
+    bounded by the beta * (k_det - k_prob) shaved bits on non-cancelling
+    outputs but unbounded where outputs cancel (the min-|c| term only
+    the probed path can charge for) — which is exactly the documented
+    trade (docs/algorithms.md#the-probabilistic-planner-prob)."""
+    import jax
+    rng = np.random.default_rng(20260809)
+    cases = [
+        ("ozimmu_h-auto:prob",
+         lambda a, b, k: analysis.prob_error_bound_rn(a, b, k)),
+        ("oz2_h-auto:fast2:prob",
+         lambda a, b, k: analysis.prob_error_bound_oz2(a, b, k,
+                                                       fast2=True)),
+        ("ozimmu_sm_h-auto:prob",
+         lambda a, b, k: analysis.prob_error_bound_sm(a, b, k)),
+    ]
+    trials, failures = 0, []
+    for spec, bound in cases:
+        cfg = parse_spec(spec)
+        fn = jax.jit(functools.partial(ozimmu_matmul, cfg=cfg))
+        for n in (96, 128):
+            pp = plan.plan_contraction(cfg, n, n, n)
+            pd = plan.plan_contraction(_det_twin(spec), n, n, n)
+            assert pp.k <= pd.k and not pp.probed
+            for gen in [lambda: make_phi_matrix(rng, n, n, 0.5),
+                        lambda: rng.standard_normal((n, n)),
+                        lambda: rng.uniform(-1.0, 1.0, (n, n))]:
+                for rep in range(2):
+                    a, b = gen(), gen()
+                    hi, lo = dd_matmul(a, b)
+                    t = np.asarray(fn(jnp.asarray(a), jnp.asarray(b)))
+                    err = np.abs((t - hi) - lo)
+                    bd = bound(a, b, pp.k)
+                    trials += 1
+                    if not np.all(err <= bd + 1e-300):
+                        failures.append((spec, n, rep,
+                                         float((err - bd).max())))
+    allowed = int(math.floor(trials * _PROB_DELTA))
+    assert len(failures) <= allowed, (trials, failures)
+
+
+# ---------------------------------------------------------------------------
 # the oracle itself: dd_matmul micro-pins
 # ---------------------------------------------------------------------------
 
