@@ -114,6 +114,41 @@ def replay(runtime, trace) -> dict:
     return runtime.run()  # idle: finalizes and returns the summary
 
 
+def steady_state(runtime, trace, warm_passes: int = 1) -> dict:
+    """Measured steady-state replay: warm pass(es) first, THEN a metrics
+    reset, THEN the timed pass — compiles never land in the headline.
+
+    ``warm_passes`` must cover every compilation the measured pass will
+    trigger.  One pass suffices for a plain runtime (it compiles every
+    prefill bucket).  A prefix-cached runtime needs TWO: the first pass
+    runs entirely cold (entries publish only as it prefills — when the
+    requests all fit in the slots they admit in one wave before anything
+    is published, so pass one gets zero hits) and therefore never
+    compiles the hit path's suffix-length buckets; those would otherwise
+    compile inside the measured window, which is exactly the
+    first-pass-measurement bug this helper exists to prevent
+    (tests/test_bench_gate.py pins the ordering)."""
+    for _ in range(warm_passes):
+        replay(runtime, trace)
+    runtime.reset_metrics()
+    return replay(runtime, trace)
+
+
+def make_shared_prefix_trace(rng: np.random.Generator, n_requests: int,
+                             vocab: int, prefix_len: int = 48,
+                             suffix_len: int = 4, gen: int = 8) -> List[dict]:
+    """The system-prompt regime: every request is one shared
+    ``prefix_len``-token prefix plus a short private suffix."""
+    prefix = rng.integers(0, vocab, size=prefix_len, dtype=np.int32)
+    out, t = [], 0.0
+    for _ in range(n_requests):
+        sfx = rng.integers(0, vocab, size=suffix_len, dtype=np.int32)
+        t += rng.exponential(1.0)
+        out.append({"prompt": np.concatenate([prefix, sfx]),
+                    "max_new": gen, "arrival_step": int(t)})
+    return out
+
+
 def main(out_json: Optional[str] = None, quick: bool = False):
     import jax
 
@@ -155,9 +190,7 @@ def main(out_json: Optional[str] = None, quick: bool = False):
         for mode, presplit in modes:
             runtime = ServingRuntime(cfg, params, slots=SLOTS,
                                      max_len=MAX_LEN, presplit=presplit)
-            replay(runtime, trace)          # warm-up: compile all buckets
-            runtime.reset_metrics()
-            summary = replay(runtime, trace)
+            summary = steady_state(runtime, trace)
             per_mode[mode] = {
                 "tokens_per_s": summary["tokens_per_s"],
                 "seconds": summary["elapsed_s"],
@@ -167,6 +200,35 @@ def main(out_json: Optional[str] = None, quick: bool = False):
             }
             assert summary["tokens_generated"] == useful, \
                 (summary["tokens_generated"], useful)
+
+        # prefix-cache TTFT on the shared-prompt trace (the system-prompt
+        # regime): paged runtimes with the prefix cache off vs on.  The
+        # cold runtime warms in one pass; the prefix runtime needs two
+        # (see steady_state) so the measured pass is hit-path steady
+        # state — every request aliases the shared prefix and prefills
+        # only its suffix.
+        ptrace = make_shared_prefix_trace(rng, n_requests, cfg.vocab)
+        cold_rt = ServingRuntime(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                 page_block=8)
+        s_cold = steady_state(cold_rt, ptrace, warm_passes=1)
+        pfx_rt = ServingRuntime(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                page_block=8, prefix_cache=True)
+        s_pfx = steady_state(pfx_rt, ptrace, warm_passes=2)
+        assert s_pfx["tokens_generated"] == s_cold["tokens_generated"]
+        ttft_ratio = s_pfx["ttft_s"]["mean"] / s_cold["ttft_s"]["mean"]
+        prefix_row = {
+            "prefix_len": int(len(ptrace[0]["prompt"]) - 4),
+            "hit_rate": s_pfx["prefix_cache"]["hit_rate"],
+            "hit_tokens": s_pfx["prefix_cache"]["hit_tokens"],
+            "ttft_uncached_s": s_cold["ttft_s"]["mean"],
+            "ttft_cached_s": s_pfx["ttft_s"]["mean"],
+            "prefix_ttft_ratio": ttft_ratio,
+        }
+        # the paper-level claim: aliasing the shared prefix must beat
+        # re-running its prefill by a wide margin (asserted here at
+        # regeneration; the CI gate checks the deterministic hit rate,
+        # not wall-clock — bench-machine noise philosophy)
+        assert ttft_ratio < 0.5, f"prefix TTFT ratio {ttft_ratio:.2f}"
 
         cached = per_mode["cached"]["tokens_per_s"]
         row = {
@@ -182,6 +244,7 @@ def main(out_json: Optional[str] = None, quick: bool = False):
             "weight_split_hit_rate":
                 (per_mode["cached"]["split_cache"] or
                  {}).get("weight_split_hit_rate"),
+            "prefix": prefix_row,
         }
         # deterministic v5e decode-step phase model: weight-splitter
         # share with and without the split-cache
@@ -210,7 +273,9 @@ def main(out_json: Optional[str] = None, quick: bool = False):
               f"cached {cached:.2f} tok/s "
               f"(x{row['runtime_over_legacy']:.2f})"
               + (f", cached/uncached x{row['cached_over_uncached']:.2f}"
-                 if row["cached_over_uncached"] else ""))
+                 if row["cached_over_uncached"] else "")
+              + f"; prefix hit rate {prefix_row['hit_rate']:.2f}, "
+                f"TTFT x{ttft_ratio:.2f}")
 
     if out_json:
         with open(out_json, "w") as f:

@@ -28,7 +28,9 @@ import time
 # v3: planner-economy headlines — `accuracy.prob_auto` (probed det/prob
 # auto-k twins) and `breakdown.auto_cost` (static jit-path twins), both
 # gated by check_against
-SUMMARY_SCHEMA_VERSION = 3
+# v4: serving `prefix` headline — shared-prompt-trace prefix-cache hit
+# rate (gated) and TTFT ratio cached/uncached (recorded)
+SUMMARY_SCHEMA_VERSION = 4
 
 
 def _headline_accuracy(rows):
@@ -151,7 +153,7 @@ def _headline_serving(rows):
     if not oz:
         return {}
     r = oz[0]
-    return {
+    out = {
         "engine": r["engine"], "slots": r["slots"],
         "requests": r["requests"],
         "tokens_per_s": {m: round(v["tokens_per_s"], 3)
@@ -161,6 +163,14 @@ def _headline_serving(rows):
         "weight_split_hit_rate": r["weight_split_hit_rate"],
         "modeled_decode": r.get("modeled_decode"),
     }
+    pfx = r.get("prefix")
+    if pfx is not None:
+        out["prefix"] = {
+            "hit_rate": pfx["hit_rate"],
+            "hit_tokens": pfx["hit_tokens"],
+            "prefix_ttft_ratio": round(pfx["prefix_ttft_ratio"], 4),
+        }
+    return out
 
 
 _HEADLINES = {
@@ -266,6 +276,17 @@ def check_against(summary: dict, committed_path: str, tol: float = 2.0,
             failures.append(
                 f"serving: weight split-cache hit rate {got_rate} fell "
                 f"below committed {want_rate}")
+        # prefix-cache hit rate on the shared-prompt trace is likewise
+        # deterministic (same trace, same keying); the TTFT ratio rides
+        # along uncommitted-gated (wall clock).
+        got_pfx = ((srv.get("headline") or {}).get("prefix")
+                   or {}).get("hit_rate")
+        want_pfx = ((srv_ref.get("headline") or {}).get("prefix")
+                    or {}).get("hit_rate")
+        if want_pfx is not None and (got_pfx or 0.0) < want_pfx:
+            failures.append(
+                f"serving: prefix-cache hit rate {got_pfx} fell below "
+                f"committed {want_pfx}")
     for name, entry in summary["benches"].items():
         if entry.get("status") != "ok":
             failures.append(f"{name}: status {entry.get('status')!r} "

@@ -34,9 +34,13 @@ from repro.serving import ServingRuntime
 
 def make_runtime(cfg, params, *, slots: int, max_len: int,
                  page_block: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  presplit: Optional[bool] = None, ctx=None) -> ServingRuntime:
     return ServingRuntime(cfg, params, slots=slots, max_len=max_len,
-                          page_block=page_block, presplit=presplit, ctx=ctx)
+                          page_block=page_block, prefill_chunk=prefill_chunk,
+                          prefix_cache=prefix_cache, presplit=presplit,
+                          ctx=ctx)
 
 
 def slot_context(cfg, params, prompt_len: int):
@@ -64,7 +68,14 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-block", type=int, default=None,
                     help="positions per KV block: enables the paged "
-                         "KV-cache pool (attention-cache families)")
+                         "KV-cache pool (every family; state leaves stay "
+                         "resident per the family descriptor)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max prompt tokens fed per slot per scheduler "
+                         "round (chunked prefill; default whole-prompt)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cache shared prompt prefixes as frozen paged "
+                         "blocks (requires --page-block)")
     ap.add_argument("--no-presplit", action="store_true",
                     help="disable the weight split-cache (A/B baseline; "
                          "ozimmu engines only)")
@@ -95,7 +106,8 @@ def main(argv=None):
         ctx = slot_context(cfg, params, args.prompt_len)
         runtime = make_runtime(
             cfg, params, slots=args.slots, max_len=args.max_len,
-            page_block=args.page_block,
+            page_block=args.page_block, prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
             presplit=False if args.no_presplit else None, ctx=ctx)
         if runtime.split_cache is not None:
             st = runtime.split_cache.stats
@@ -123,6 +135,11 @@ def main(argv=None):
               f"{sc['weight_split_hit_rate']:.2f}, "
               f"{sc['avoided_split_bytes'] / 1e6:.2f} MB of decode-time "
               f"re-splitting avoided")
+    if s.get("prefix_cache") is not None:
+        pc = s["prefix_cache"]
+        print(f"[serve] prefix-cache: hit rate {pc['hit_rate']:.2f} "
+              f"({pc['hit_tokens']} prefill tokens aliased, "
+              f"{pc['entries']} entries)")
     print("[serve] sample continuation:",
           outs[0][-args.gen:][:16].tolist())
     return s

@@ -271,6 +271,16 @@ def decode_positions(cur_len, batch: int) -> jax.Array:
     return c[:, None]
 
 
+def ring_row_index(cur_len, cache_len: int):
+    """Cache row a decode step at sequence position ``cur_len`` writes:
+    ``(cur_len - 1) mod cache_len`` (the ring wrap covers windowed
+    caches whose buffer is shorter than the sequence).  The single
+    source of truth shared by :func:`cache_update_row` and the paged
+    pool's row scatter (``repro.serving.kvcache.PagedKV``) — the two
+    must agree or a paged write lands in the wrong block."""
+    return (jnp.asarray(cur_len) - 1) % cache_len
+
+
 def cache_update_row(buf: jax.Array, new: jax.Array, cur_len) -> jax.Array:
     """Write the decode-step row at position ``(cur_len - 1) mod L`` of a
     per-slot cache buffer.
@@ -287,9 +297,8 @@ def cache_update_row(buf: jax.Array, new: jax.Array, cur_len) -> jax.Array:
     guard their garbage k/v would land in row L-1 — harmless for per-row
     split scales (the row stays masked) but fatal under the oz2 GLOBAL
     digit grid, where one garbage row can shift every entry's scale."""
-    cache_len = buf.shape[1]
     c = jnp.asarray(cur_len)
-    idx = (c - 1) % cache_len
+    idx = ring_row_index(c, buf.shape[1])
     new = new.astype(buf.dtype)
     if c.ndim == 0:
         return lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)

@@ -4,19 +4,25 @@ The inference-side system layer over the emulated-GEMM engine
 (docs/serving.md):
 
 * :mod:`repro.serving.scheduler`  — host-side FIFO continuous batching
-  (slot admission / eviction, bucketed prefill grouping).
-* :mod:`repro.serving.kvcache`    — block-paged KV-cache pool plus the
+  (slot admission / eviction, bucketed prefill + chunk grouping).
+* :mod:`repro.serving.kvcache`    — block-paged KV-cache pool (per-family
+  state descriptors, copy-on-write block aliasing) plus the
   family-generic per-slot cache operations.
+* :mod:`repro.serving.prefix_cache` — frozen shared prompt prefixes
+  served by block-table aliasing instead of a forward pass.
 * :mod:`repro.serving.presplit`   — freezes static weight matrices into
   their spec-resolved int8 splits (``repro.core.split_cache``) so decode
   steps skip the B-side splitter entirely.
 * :mod:`repro.serving.metrics`    — tokens/s, TTFT, queue depth,
-  split-cache savings.
+  split-cache and prefix-cache savings.
 * :mod:`repro.serving.runtime`    — :class:`ServingRuntime`, the engine
-  room tying them together around jitted prefill/decode steps.
+  room tying them together around jitted chunk/decode steps.
 """
+from repro.serving.kvcache import PagedKV
 from repro.serving.metrics import ServingMetrics
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.runtime import ServingRuntime
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["ServingRuntime", "ServingMetrics", "Request", "Scheduler"]
+__all__ = ["ServingRuntime", "ServingMetrics", "Request", "Scheduler",
+           "PagedKV", "PrefixCache"]

@@ -32,11 +32,13 @@ class ServingMetrics:
     prefill_tokens: int = 0
     decode_steps: int = 0
     prefill_calls: int = 0
+    prefill_chunks: int = 0           # non-final chunk calls (chunked mode)
     evictions: int = 0
     ttft: List[float] = dataclasses.field(default_factory=list)
     latency: List[float] = dataclasses.field(default_factory=list)
     queue_depth_samples: List[int] = dataclasses.field(default_factory=list)
     split_cache: Optional[Dict[str, Any]] = None
+    prefix_cache: Optional[Dict[str, Any]] = None
 
     def start(self):
         if self.started_at is None:
@@ -76,6 +78,7 @@ class ServingMetrics:
             "prefill_tokens": self.prefill_tokens,
             "decode_steps": self.decode_steps,
             "prefill_calls": self.prefill_calls,
+            "prefill_chunks": self.prefill_chunks,
             "evictions": self.evictions,
             "elapsed_s": round(self.elapsed, 4),
             "tokens_per_s": round(self.tokens_per_s, 2),
@@ -86,4 +89,5 @@ class ServingMetrics:
             "queue_depth": {"max": max(qd) if qd else 0,
                             "mean": (sum(qd) / len(qd)) if qd else 0.0},
             "split_cache": self.split_cache,
+            "prefix_cache": self.prefix_cache,
         }

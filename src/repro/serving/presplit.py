@@ -35,7 +35,8 @@ from repro.core import split_cache as sc
 from repro.core import splitting
 from repro.core.engine import MatmulEngine, PresplitWeight
 
-__all__ = ["WRAP_KEYS", "wrap_params", "wrappable_paths"]
+__all__ = ["WRAP_KEYS", "wrap_params", "wrappable_paths",
+           "wrapped_weight_bytes"]
 
 # projection weights consumed as engine(x, w) — contract w's axis 0
 WRAP_KEYS = frozenset({
@@ -105,6 +106,24 @@ def freeze_weight(w: jax.Array, engine: MatmulEngine,
     k = int(sp.digits.shape[nstack])
     return PresplitWeight(w, sp.digits, sp.scale, sp.base, sp.gbase,
                           int(sp.beta), cfg.split, k)
+
+
+def wrapped_weight_bytes(wrapped_params, engine: MatmulEngine) -> int:
+    """Compute-dtype bytes of the weights whose splits are frozen in a
+    ``wrap_params`` output — the splitter-input volume every step SKIPS
+    (the ``avoided_split_bytes`` metric counts it once per consumed
+    position)."""
+    if not engine.is_ozimmu:
+        return 0
+    oz = engine.ozimmu_config
+    itemsize = 8 if (oz.accum_dtype == "f64"
+                     and jax.config.jax_enable_x64) else 4
+    return sum(
+        int(np.prod(w.array.shape)) * itemsize
+        for w in jax.tree_util.tree_leaves(
+            wrapped_params,
+            is_leaf=lambda x: isinstance(x, PresplitWeight))
+        if isinstance(w, PresplitWeight))
 
 
 def wrap_params(params, engine: MatmulEngine,

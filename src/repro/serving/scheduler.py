@@ -79,10 +79,19 @@ class Slot:
     pos: int = 0                        # tokens currently in the cache
     last_token: int = 0                 # next token to feed the decode step
     admit_seq: int = -1                 # admission order (eviction picks max)
+    prefilled: int = 0                  # prefill tokens already in the cache
+    #   (< len(prefill_tokens()) means mid-chunked-prefill: the slot is
+    #    occupied but must NOT decode yet; a prefix-cache hit starts it
+    #    above zero — the aliased positions never run a forward pass)
 
     @property
     def free(self) -> bool:
         return self.request is None
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.request is not None and \
+            self.prefilled >= len(self.request.prefill_tokens())
 
 
 class Scheduler:
@@ -156,6 +165,35 @@ class Scheduler:
             groups.setdefault(b, []).append((slot_idx, req))
         return sorted(groups.items())
 
+    # -- chunked prefill -------------------------------------------------
+
+    def pending_prefill(self) -> List[Tuple[int, "Request"]]:
+        """Occupied slots whose prefill is not complete (newly admitted,
+        or mid-chunk), in slot order — each takes ONE chunk per round."""
+        return [(i, s.request) for i, s in enumerate(self.slots)
+                if s.request is not None and not s.prefill_done]
+
+    def chunk_groups(self, plans: List[Tuple[int, Request, int]]
+                     ) -> List[Tuple[int, List[Tuple[int, Request, int]]]]:
+        """Group (slot, request, chunk_len) plans by the bucket of the
+        CHUNK length: [(bucket_len, plans)] — every plan in a group
+        shares one compiled call (right-aligned inside the bucket)."""
+        groups: Dict[int, List[Tuple[int, Request, int]]] = {}
+        for slot_idx, req, clen in plans:
+            groups.setdefault(self.bucket_fn(clen), []).append(
+                (slot_idx, req, clen))
+        return sorted(groups.items())
+
+    def on_chunk(self, slot_idx: int, n: int):
+        """A non-final prefill chunk fed ``n`` more tokens into the
+        slot's cache (no token produced; the slot stays non-decoding)."""
+        slot = self.slots[slot_idx]
+        assert slot.request is not None, f"slot {slot_idx} is free"
+        slot.prefilled += int(n)
+        assert slot.prefilled < len(slot.request.prefill_tokens()), \
+            "final chunk must go through on_prefilled"
+        self._check()
+
     # -- decode progress -------------------------------------------------
 
     def on_prefilled(self, slot_idx: int, first_token: int,
@@ -166,6 +204,7 @@ class Scheduler:
         slot = self.slots[slot_idx]
         assert slot.request is not None, f"slot {slot_idx} is free"
         slot.pos = len(slot.request.prefill_tokens())
+        slot.prefilled = slot.pos
         return self._accept_token(slot_idx, first_token, now)
 
     def on_token(self, slot_idx: int, token: int, now: float = 0.0) -> bool:
@@ -222,6 +261,11 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if not s.free]
 
+    def decode_slots(self) -> List[int]:
+        """Slots eligible for a decode step: occupied AND fully prefilled
+        (mid-chunk slots are excluded until their final chunk lands)."""
+        return [i for i, s in enumerate(self.slots) if s.prefill_done]
+
     @property
     def queue_depth(self) -> int:
         return len(self.queue)
@@ -239,3 +283,7 @@ class Scheduler:
         assert not (queued & set(owned)), "request both queued and slotted"
         assert len(owned) + sum(s.free for s in self.slots) == \
             len(self.slots), "slot leak"
+        for i, s in enumerate(self.slots):
+            limit = 0 if s.free else len(s.request.prefill_tokens())
+            assert 0 <= s.prefilled <= limit, \
+                f"slot {i} prefilled {s.prefilled} outside [0, {limit}]"

@@ -5,9 +5,11 @@ The gate is CI's only eye on the committed trajectory artifact, so its
 *failure* behavior is what matters: a headline row unknown to the
 artifact must be a hard failure (an ungated row is a row whose
 regressions CI can't see), with ``--allow-new-rows`` as the explicit
-escape hatch, and the ``prob_auto`` planner-economy rows must be gated
-on error, resolved k, and det-twin economy.  Pure dict plumbing — no
-benches run here.
+escape hatch, the ``prob_auto`` planner-economy rows must be gated
+on error, resolved k, and det-twin economy, and the serving gate must
+catch split-cache / prefix-cache hit-rate drops.  Pure dict plumbing —
+no benches run here, plus the ``steady_state`` measurement-ordering
+regression (a fake runtime; the first-pass-measurement bug).
 """
 import copy
 import json
@@ -17,7 +19,19 @@ import pytest
 from benchmarks import run as bench_run
 
 
-def _summary(err=None, prob_rows=None, extra_benches=()):
+SERVING_HEADLINE = {
+    "engine": "ozimmu_h-4:df32",
+    "runtime_tokens_per_s": 100.0,
+    "runtime_over_legacy": 1.5,
+    "cached_over_uncached": 1.2,
+    "weight_split_hit_rate": 1.0,
+    "modeled_decode": None,
+    "prefix": {"hit_rate": 0.8, "hit_tokens": 384,
+               "prefix_ttft_ratio": 0.31},
+}
+
+
+def _summary(err=None, prob_rows=None, extra_benches=(), serving=None):
     headline = {"phi": 2.0, "k": 8,
                 "err": dict(err or {"ozimmu": 1e-10, "ozimmu_h": 1e-11}),
                 "err_fp64": 7e-12}
@@ -25,9 +39,12 @@ def _summary(err=None, prob_rows=None, extra_benches=()):
         headline["prob_auto"] = {"phi": 2.0, "rows": prob_rows}
     benches = {"accuracy": {"status": "ok", "seconds": 1.0,
                             "headline": headline}}
+    if serving is not None:
+        benches["serving"] = {"status": "ok", "seconds": 1.0,
+                              "headline": serving}
     for name in extra_benches:
         benches[name] = {"status": "ok", "seconds": 1.0, "headline": {}}
-    return {"schema_version": 2, "quick": True, "only": sorted(benches),
+    return {"schema_version": 4, "quick": True, "only": sorted(benches),
             "benches": benches}
 
 
@@ -137,3 +154,120 @@ def test_cli_wires_allow_new_rows():
     ap = bench_run._build_parser()
     assert ap.parse_args([]).allow_new_rows is False
     assert ap.parse_args(["--allow-new-rows"]).allow_new_rows is True
+
+
+# ---------------------------------------------------------------------------
+# serving gate: split-cache + prefix-cache hit rates
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def committed_serving(tmp_path):
+    art = _summary(serving=copy.deepcopy(SERVING_HEADLINE))
+    path = tmp_path / "BENCH_ref.json"
+    path.write_text(json.dumps(art))
+    return str(path), art
+
+
+def test_serving_gate_passes_on_identical(committed_serving):
+    path, art = committed_serving
+    assert _gate(copy.deepcopy(art), path) == []
+
+
+def test_prefix_hit_rate_drop_fails(committed_serving):
+    """The shared-prompt trace is deterministic, so a hit-rate drop means
+    the keying or publication logic regressed — a hard failure."""
+    path, art = committed_serving
+    got = copy.deepcopy(art)
+    got["benches"]["serving"]["headline"]["prefix"]["hit_rate"] = 0.5
+    failures = _gate(got, path)
+    assert any("prefix-cache hit rate" in f and "0.5" in f
+               for f in failures), failures
+
+
+def test_prefix_headline_vanishing_fails(committed_serving):
+    """A run that silently stops producing the prefix headline (bench
+    drift) must not pass the gate while the artifact still has one."""
+    path, art = committed_serving
+    got = copy.deepcopy(art)
+    del got["benches"]["serving"]["headline"]["prefix"]
+    failures = _gate(got, path)
+    assert any("prefix-cache hit rate" in f for f in failures), failures
+
+
+def test_weight_split_hit_rate_drop_fails(committed_serving):
+    path, art = committed_serving
+    got = copy.deepcopy(art)
+    got["benches"]["serving"]["headline"]["weight_split_hit_rate"] = 0.9
+    failures = _gate(got, path)
+    assert any("weight split-cache hit rate" in f for f in failures), \
+        failures
+
+
+def test_prefix_ttft_ratio_not_gated(committed_serving):
+    """Wall-clock TTFT ratios are recorded for the trajectory but NOT
+    gated — CI machines are noisy."""
+    path, art = committed_serving
+    got = copy.deepcopy(art)
+    got["benches"]["serving"]["headline"]["prefix"][
+        "prefix_ttft_ratio"] = 5.0
+    assert _gate(got, path) == []
+
+
+# ---------------------------------------------------------------------------
+# steady_state measurement ordering (the first-pass-measurement bug)
+# ---------------------------------------------------------------------------
+
+class _FakeRuntime:
+    """Minimal runtime double: counts replay passes and which pass the
+    metrics window covers, so the test can pin warm -> reset -> measure
+    ordering without running a model."""
+
+    class _Sched:
+        all_done = True
+
+    def __init__(self):
+        self.sched = self._Sched()
+        self.events = []
+        self.passes = 0
+        self.window_passes = 0      # passes since the last metrics reset
+
+    def submit(self, prompt, max_new):
+        self.events.append("submit")
+
+    def step(self):
+        self.events.append("step")
+
+    def run(self):
+        self.passes += 1
+        self.window_passes += 1
+        self.events.append("run")
+        return {"pass": self.passes, "window_passes": self.window_passes}
+
+    def reset_metrics(self):
+        self.window_passes = 0
+        self.events.append("reset")
+
+
+def test_steady_state_orders_warm_reset_measure():
+    """steady_state must run EVERY warm pass, then reset the metrics
+    window, then measure — the measured summary covers exactly one pass.
+    (The original bench measured pass one: with a prefix cache and
+    requests <= slots, pass one runs fully cold and compiles the
+    hit-path buckets inside the timed window.)"""
+    from benchmarks.bench_serving import steady_state
+    trace = [{"prompt": [1, 2], "max_new": 1, "arrival_step": 0}]
+    rt = _FakeRuntime()
+    out = steady_state(rt, trace, warm_passes=2)
+    assert rt.passes == 3                    # 2 warm + 1 measured
+    assert out == {"pass": 3, "window_passes": 1}
+    runs = [i for i, e in enumerate(rt.events) if e == "run"]
+    reset = rt.events.index("reset")
+    assert runs[0] < runs[1] < reset < runs[2]
+
+
+def test_steady_state_default_single_warm_pass():
+    from benchmarks.bench_serving import steady_state
+    rt = _FakeRuntime()
+    out = steady_state(rt, [{"prompt": [1], "max_new": 1,
+                             "arrival_step": 0}])
+    assert rt.passes == 2 and out["window_passes"] == 1

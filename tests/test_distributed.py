@@ -635,6 +635,51 @@ def test_serving_runtime_mesh_smoke():
     """, x64=True)
 
 
+def test_serving_prefix_chunked_paged_mesh_bitwise():
+    """{paged, chunked prefill, prefix cache} under a (data, model) mesh
+    with an @model engine reproduces the monolithic un-chunked mesh
+    runtime per token — including across a prefix-hit second wave (the
+    mesh key rides in the prefix keying, so entries published here can
+    never alias a differently-sharded pipeline's)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import configs
+        from repro.distributed import compat
+        from repro.distributed.sharding import use_rules
+        from repro.launch.mesh import make_test_mesh, mesh_rules
+        from repro.models import api
+        from repro.serving import ServingRuntime
+
+        arch = "internlm2_1_8b"
+        mesh = make_test_mesh(data=2, model=4)
+        cfg = configs.get_config(arch, smoke=True,
+                                 engine_spec="ozimmu_h-4:df32@model")
+        with compat.set_mesh(mesh), use_rules(mesh_rules(mesh, arch)):
+            model = api.get_model(cfg)
+            params, _ = model.init(jax.random.PRNGKey(0), cfg)
+            rng = np.random.default_rng(0)
+            prefix = rng.integers(0, cfg.vocab, size=9, dtype=np.int32)
+            waves = [[np.concatenate([prefix,
+                                      rng.integers(0, cfg.vocab, size=2,
+                                                   dtype=np.int32)])
+                      for _ in range(3)] for _ in range(2)]
+            cold = ServingRuntime(cfg, params, slots=2, max_len=32)
+            refs = [cold.generate([p.copy() for p in w], 3)
+                    for w in waves]
+            rt = ServingRuntime(cfg, params, slots=2, max_len=32,
+                                page_block=4, prefill_chunk=3,
+                                prefix_cache=True)
+            outs = [rt.generate([p.copy() for p in w], 3) for w in waves]
+        for o, r in zip(outs[0] + outs[1], refs[0] + refs[1]):
+            assert np.array_equal(o, r), (o, r)
+        assert rt.prefix.stats.hits >= 3          # wave 2 hit the prefix
+        s = rt.metrics.summary()
+        assert s["requests"]["finished"] == 6
+        assert s["split_cache"]["weight_split_hit_rate"] == 1.0
+        print("OK")
+    """, x64=True)
+
+
 def test_psum_df32_error_free_vs_plain_f32():
     """The compensated DF32 reduction keeps what a plain f32 psum rounds
     away: partials engineered so small terms vanish under f32 summation."""

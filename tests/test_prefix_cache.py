@@ -1,0 +1,325 @@
+"""Prefix KV cache: block aliasing, copy-on-write, keying, eviction.
+
+Covers the serving-level prefix cache (repro.serving.prefix_cache) and
+the PagedKV refcount/CoW machinery it rides on:
+
+* hit / miss / partial-overlap lookup semantics and the bitwise contract
+  (a hit reproduces the cold prefill exactly — adopted blocks were
+  written by the same jitted chunk calls over the same tokens);
+* copy-on-write divergence at the pool level: two tables aliasing one
+  physical block must never observe each other's writes;
+* eviction under block pressure: LRU entries are dropped BEFORE live
+  slots are preempted, blocks are conserved throughout;
+* keyed-by-spec isolation: a deterministic engine and its ``:prob``
+  twin are numerically different pipelines and must never alias;
+* the full family matrix {prefix on, chunked on, paged} vs the
+  monolithic un-chunked reference, per token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.serving import PagedKV, PrefixCache, ServingRuntime
+from repro.serving.prefix_cache import config_key
+
+GEN = 3
+PREFIX_LEN = 19        # wave-1 shared prefix (m_pub = 16 at block=8)
+SUFFIX_LEN = 3
+
+
+@pytest.fixture(scope="module")
+def dense():
+    """Smoke dense model on an ozimmu engine (presplit active) — the
+    prefix cache must compose with the weight split-cache."""
+    cfg = configs.get_config("internlm2_1_8b", smoke=True,
+                             engine_spec="ozimmu_h-4:df32")
+    model = api.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def _prompts(rng, vocab, n, prefix):
+    return [np.concatenate([prefix,
+                            rng.integers(0, vocab, size=SUFFIX_LEN,
+                                         dtype=np.int32)])
+            for _ in range(n)]
+
+
+def _cold(cfg, params, prompts, slots=3):
+    """Monolithic, un-chunked, un-cached reference outputs."""
+    rt = ServingRuntime(cfg, params, slots=slots, max_len=64)
+    return rt.generate([p.copy() for p in prompts], GEN)
+
+
+# ---------------------------------------------------------------------------
+# PagedKV: refcounts + copy-on-write (direct unit tests)
+# ---------------------------------------------------------------------------
+
+def _set_block(paged, bid, value):
+    for name in paged.paged_names:
+        ax = paged._slot_ax[name]
+        idx = (slice(None),) * ax + (bid,)
+        paged.pool[name] = paged.pool[name].at[idx].set(value)
+
+
+def _first_block_view(paged, slot):
+    """The first ``block`` cache positions of ``slot``, gathered through
+    its table — what the model would actually read."""
+    g = paged.gather(paged.device_tables())
+    name = paged.paged_names[0]
+    ax = paged._slot_ax[name]
+    view = np.take(np.asarray(g[name]), slot, axis=ax)
+    return np.take(view, range(paged.block), axis=ax)
+
+
+def test_paged_cow_divergence(dense):
+    """Two slots aliasing one physical block: a write through one must
+    copy first (CoW) so the other's view never changes."""
+    cfg, model, params = dense
+    paged = PagedKV(cfg, model, 2, 32, block=8, params=params)
+    assert paged.ensure(0, 16)            # slot 0: two blocks
+    shared = paged.share_blocks(0, 2)     # a prefix entry's references
+    paged.adopt_blocks(1, shared)         # slot 1 aliases them
+    b0 = int(paged.tables[0, 0])
+    assert int(paged.tables[1, 0]) == b0
+    assert paged.refcount[b0] == 3        # slot 0 + entry + slot 1
+    assert paged.live_blocks + paged.free_block_count == paged.n_blocks
+
+    _set_block(paged, b0, 1.0)            # aliased bytes, seen by both
+    assert np.all(_first_block_view(paged, 0) == 1.0)
+    assert np.all(_first_block_view(paged, 1) == 1.0)
+
+    # privatize slot 1's first block before it diverges
+    assert paged.cow_for_write(1, [0])
+    b1 = int(paged.tables[1, 0])
+    assert b1 != b0 and paged.cow_copies == 1
+    assert paged.refcount[b0] == 2 and paged.refcount[b1] == 1
+    # the copy carried the bytes ...
+    assert np.all(_first_block_view(paged, 1) == 1.0)
+    # ... and divergence stays private
+    _set_block(paged, b1, 2.0)
+    assert np.all(_first_block_view(paged, 0) == 1.0)
+    assert np.all(_first_block_view(paged, 1) == 2.0)
+
+    # already-private blocks are left alone (no copy churn)
+    assert paged.cow_for_write(1, [0]) and paged.cow_copies == 1
+    # the second table index is still shared three ways
+    assert paged.refcount[int(paged.tables[0, 1])] == 3
+    assert paged.live_blocks + paged.free_block_count == paged.n_blocks
+
+    # teardown: every reference released -> every block back on the
+    # free list (conservation, the property the soak asserts at scale)
+    paged.free_slot(1)
+    paged.free_slot(0)
+    paged.release_blocks(shared)
+    assert paged.free_block_count == paged.n_blocks
+    assert paged.live_blocks == 0
+
+
+def test_paged_cow_needs_free_block(dense):
+    """CoW needs a free block for the copy: a full pool reports False
+    (the runtime then evicts) instead of corrupting the shared block."""
+    cfg, model, params = dense
+    paged = PagedKV(cfg, model, 2, 32, block=8, n_blocks=2, params=params)
+    assert paged.ensure(0, 16)
+    paged.adopt_blocks(1, paged.share_blocks(0, 2))
+    assert not paged.cow_for_write(1, [0])
+    assert paged.cow_copies == 0
+
+
+# ---------------------------------------------------------------------------
+# hit / miss / partial overlap + bitwise-vs-cold (runtime level)
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_miss_partial_overlap(dense):
+    cfg, model, params = dense
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab, size=PREFIX_LEN, dtype=np.int32)
+    wave1 = _prompts(rng, cfg.vocab, 3, prefix)
+    wave2 = _prompts(rng, cfg.vocab, 3, prefix)
+    # partial overlap: diverges after 10 tokens -> only the length-8
+    # aligned sub-prefix can hit
+    part = wave2[0].copy()
+    part[10] = (part[10] + 1) % cfg.vocab
+
+    rt = ServingRuntime(cfg, params, slots=3, max_len=64, page_block=8,
+                        prefix_cache=True)
+    out1 = rt.generate([p.copy() for p in wave1], GEN)
+    st = rt.prefix.stats
+    # all three admitted cold (one wave), publication at m_pub=16 plus
+    # the aligned sub-length 8 (stateless family), deduped across slots
+    assert (st.hits, st.misses) == (0, 3)
+    assert st.inserted == 2 and len(rt.prefix) == 2
+
+    out2 = rt.generate([p.copy() for p in wave2], GEN)
+    assert (st.hits, st.misses) == (3, 3)
+    assert st.hit_tokens == 3 * 16        # 16 prefill tokens aliased each
+
+    out3 = rt.generate([part.copy()], GEN)
+    # longest-first lookup: 16 misses (bytes differ at index 10), 8 hits
+    assert (st.hits, st.misses) == (4, 3)
+    assert st.hit_tokens == 3 * 16 + 8
+    # the diverged prompt publishes its OWN 16-token entry afterwards
+    assert st.inserted == 3 and len(rt.prefix) == 3
+
+    refs = _cold(cfg, params, wave1 + wave2 + [part])
+    for o, r in zip(out1 + out2 + out3, refs):
+        np.testing.assert_array_equal(o, r)
+    pc = rt.metrics.summary()["prefix_cache"]
+    assert pc["hit_rate"] == pytest.approx(4 / 7)
+    assert pc["entries"] == 3
+
+
+def test_prefix_chunked_hit_bitwise(dense):
+    """Chunked prefill + prefix cache together: chunk boundaries land on
+    the publication length, hits resume mid-prompt, outputs stay
+    bitwise."""
+    cfg, model, params = dense
+    rng = np.random.default_rng(8)
+    prefix = rng.integers(0, cfg.vocab, size=PREFIX_LEN, dtype=np.int32)
+    waves = [_prompts(rng, cfg.vocab, 3, prefix) for _ in range(2)]
+    rt = ServingRuntime(cfg, params, slots=3, max_len=64, page_block=8,
+                        prefill_chunk=5, prefix_cache=True)
+    outs = [rt.generate([p.copy() for p in w], GEN) for w in waves]
+    assert rt.prefix.stats.hits == 3
+    refs = _cold(cfg, params, waves[0] + waves[1])
+    for o, r in zip(outs[0] + outs[1], refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_steady_state_prefix_measured_window_all_hits(dense):
+    """The bench's steady-state helper against a REAL prefix runtime:
+    after two warm passes every request in the measured window is a
+    prefix hit (the warm passes published the entries and compiled the
+    hit path's suffix buckets — the first-pass-measurement bug fixed in
+    benchmarks/bench_serving.py)."""
+    from benchmarks.bench_serving import (make_shared_prefix_trace,
+                                          steady_state)
+    cfg, model, params = dense
+    rng = np.random.default_rng(5)
+    trace = make_shared_prefix_trace(rng, 4, cfg.vocab, prefix_len=19,
+                                     suffix_len=3, gen=3)
+    rt = ServingRuntime(cfg, params, slots=4, max_len=64, page_block=8,
+                        prefix_cache=True)
+    s = steady_state(rt, trace, warm_passes=2)
+    assert s["requests"]["finished"] == len(trace)
+    assert s["prefix_cache"]["hit_rate"] == 1.0
+    assert s["prefix_cache"]["hit_tokens"] == 16 * len(trace)
+
+
+# ---------------------------------------------------------------------------
+# eviction under block pressure
+# ---------------------------------------------------------------------------
+
+def test_prefix_eviction_under_block_pressure(dense):
+    """A pool too small for the working set drops LRU prefix entries
+    first (cheaper than preempting live progress); requests still finish
+    with bitwise-correct outputs and blocks are conserved."""
+    cfg, model, params = dense
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab, size=PREFIX_LEN, dtype=np.int32)
+    prompts = _prompts(rng, cfg.vocab, 4, prefix)
+    rt = ServingRuntime(cfg, params, slots=2, max_len=64, page_block=8,
+                        page_blocks=5, prefix_cache=True)
+    outs = rt.generate([p.copy() for p in prompts], GEN)
+    refs = _cold(cfg, params, prompts, slots=2)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+    s = rt.metrics.summary()
+    assert s["requests"]["finished"] == len(prompts)
+    assert rt.prefix.stats.evicted > 0
+    paged = rt.paged
+    assert paged.live_blocks + paged.free_block_count == paged.n_blocks
+    # at drain every live slot is freed: only entry references remain
+    held = sum(len(e.blocks) for e in rt.prefix.entries.values())
+    assert paged.live_blocks <= held
+
+
+# ---------------------------------------------------------------------------
+# keyed-by-spec isolation (det vs :prob must never alias)
+# ---------------------------------------------------------------------------
+
+def test_prefix_key_isolation_det_vs_prob(dense):
+    cfg, model, params = dense
+    det = configs.get_config("internlm2_1_8b", smoke=True,
+                             engine_spec="ozimmu_h-auto:df32")
+    prob = configs.get_config("internlm2_1_8b", smoke=True,
+                              engine_spec="ozimmu_h-auto:df32:prob")
+    assert config_key(det) != config_key(prob)
+
+    # functional: entries published under the det key are invisible to a
+    # lookup carrying the prob key — numerically distinct pipelines miss
+    paged = PagedKV(det, model, 2, 32, block=8, params=params)
+    cache = PrefixCache(paged, det)
+    tokens = np.arange(17, dtype=np.int32)
+    assert paged.ensure(0, 16)
+    cache.publish(tokens, 16, 0)
+    assert cache.lookup(tokens) is not None
+    assert cache.lookup(tokens, key0=config_key(prob)) is None
+    assert (cache.stats.hits, cache.stats.misses) == (1, 1)
+
+
+def test_prefix_cache_rejects_foreign_pool(dense):
+    """A PrefixCache instance is bound to ONE pool — handing it to a
+    runtime with a different pool must fail closed."""
+    cfg, model, params = dense
+    foreign = PrefixCache(PagedKV(cfg, model, 2, 32, block=8,
+                                  params=params), cfg)
+    with pytest.raises(ValueError, match="another pool"):
+        ServingRuntime(cfg, params, slots=2, max_len=64, page_block=8,
+                       prefix_cache=foreign)
+
+
+def test_prefix_cache_requires_paged(dense):
+    cfg, model, params = dense
+    with pytest.raises(ValueError, match="page_block"):
+        ServingRuntime(cfg, params, slots=2, max_len=64,
+                       prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# full family matrix: {prefix on, chunked on, paged} == monolithic
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = (
+    "internlm2_1_8b",        # dense
+    "deepseek_moe_16b",      # moe
+    "deepseek_v2_236b",      # mla_moe (latent + k_rope paged)
+    "llama32_vision_11b",    # vlm (cross-KV state leaves)
+    "seamless_m4t_medium",   # encdec (cross-KV state leaves)
+    "mamba2_780m",           # ssm (pure-state: nothing pages)
+    "recurrentgemma_9b",     # hybrid (paged K/V + recurrent state)
+)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_family_prefix_chunked_paged_matches_monolithic(arch):
+    """Every serving family, served {paged, chunked, prefix-cached},
+    reproduces the monolithic un-chunked un-cached runtime per token —
+    across a cold wave AND a prefix-hit wave."""
+    from repro.launch.serve import slot_context
+    cfg = configs.get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    ctx = slot_context(cfg, params, 11)
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab, size=9, dtype=np.int32)
+    waves = [[np.concatenate([prefix,
+                              rng.integers(0, cfg.vocab, size=2,
+                                           dtype=np.int32)])
+              for _ in range(3)] for _ in range(2)]
+
+    cold_rt = ServingRuntime(cfg, params, slots=2, max_len=32, ctx=ctx)
+    refs = [cold_rt.generate([p.copy() for p in w], GEN) for w in waves]
+
+    rt = ServingRuntime(cfg, params, slots=2, max_len=32, page_block=4,
+                        prefill_chunk=3, prefix_cache=True, ctx=ctx)
+    outs = [rt.generate([p.copy() for p in w], GEN) for w in waves]
+    for o, r in zip(outs[0] + outs[1], refs[0] + refs[1]):
+        np.testing.assert_array_equal(o, r)
+    # the shared 9-token prefix publishes at m_pub=8; wave 2 must hit
+    assert rt.prefix.stats.hits >= 3
+    assert rt.metrics.summary()["requests"]["finished"] == 6

@@ -14,7 +14,12 @@ Covers the PR-5 subsystem (docs/serving.md):
   and off;
 * paged-KV equivalence to the monolithic cache per token, including
   under pool pressure (evictions);
-* a `slow`-marked soak replay (random trace, tight pool).
+* chunked prefill: bitwise identity to monolithic prefill across chunk
+  sizes (1, a non-divisor, larger-than-any-prompt), decode interleaving
+  during a long chunked prefill, and a chunked+paged soak;
+* property-based scheduler/pool invariants (hypothesis when installed;
+  skipped gracefully otherwise — tests/conftest.hypothesis_or_stubs);
+* `slow`-marked soak replays (random trace, tight pool, chunking).
 
 The `@mesh` composition of the presplit path is asserted in
 tests/test_distributed.py (needs forced host devices).
@@ -545,3 +550,213 @@ def test_serving_soak_random_trace(served):
     assert summary["requests"]["finished"] == len(trace)
     assert summary["tokens_generated"] == sum(r["max_new"] for r in trace)
     assert summary["split_cache"]["weight_split_hit_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", (1, 5, 16))
+def test_chunked_prefill_equals_monolithic(served, chunk):
+    """Splitting the prefill scan is bitwise-exact: the scan body is the
+    same per-token function, each chunk resumes from the cache the
+    previous one wrote.  chunk=1 is the extreme (every prompt token its
+    own round), 5 divides none of the prompt lengths, 16 exceeds them
+    all (degenerates to monolithic prefill)."""
+    cfg, params, prompts, refs = served
+    rt, outs = _run(cfg, params, prompts, prefill_chunk=chunk)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+    s = rt.metrics.summary()
+    if chunk < max(PROMPT_LENS):
+        assert s["prefill_chunks"] > 0      # actually chunked
+    else:
+        assert s["prefill_chunks"] == 0     # one call per prompt
+
+
+@pytest.mark.parametrize("chunk", (1, 5))
+def test_chunked_prefill_paged_equals_monolithic(served, chunk):
+    """Chunked prefill over the paged pool (span write-back per chunk)
+    is bitwise too."""
+    cfg, params, prompts, refs = served
+    _, outs = _run(cfg, params, prompts, prefill_chunk=chunk,
+                   page_block=8)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_chunked_prefill_ssm_family():
+    """State families freeze mid-prefill recurrent states through the
+    decode-side slot select (`_decode_select`) — a neighbour's decode
+    step must not integrate into a half-prefilled SSM state."""
+    from repro import configs
+    from repro.models import api
+    from repro.serving import ServingRuntime
+    cfg = configs.get_config("mamba2_780m", smoke=True)
+    model = api.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n, dtype=np.int32)
+               for n in (4, 7, 5)]
+    ref_rt = ServingRuntime(cfg, params, slots=2, max_len=32)
+    refs = ref_rt.generate([p.copy() for p in prompts], 3)
+    rt = ServingRuntime(cfg, params, slots=2, max_len=32,
+                        prefill_chunk=2)
+    outs = rt.generate([p.copy() for p in prompts], 3)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_chunked_prefill_interleaves_decode(served):
+    """Ordering invariant: while a long prompt trickles in chunk by
+    chunk, already-resident slots keep producing one token per round —
+    chunking exists so a long prefill cannot stall TTFT/ITL for
+    everyone else."""
+    from repro.serving import ServingRuntime
+    cfg, params, prompts, _ = served
+    rt = ServingRuntime(cfg, params, slots=2, max_len=64,
+                        prefill_chunk=2)
+    short = rt.submit(prompts[2], max_new=12)       # 3 tokens
+    for _ in range(3):
+        rt.step()
+    n0 = len(short.generated)
+    assert n0 > 0                                   # already decoding
+    long_req = rt.submit(prompts[3], max_new=2)     # 11 tokens: 6 chunks
+    for _ in range(4):
+        rt.step()
+    # the long prompt is still mid-prefill: no token produced yet ...
+    assert len(long_req.generated) == 0
+    assert rt.metrics.summary()["prefill_chunks"] >= 3
+    # ... while the short request advanced one token EVERY round
+    assert len(short.generated) == n0 + 4
+    rt.run()
+    assert len(short.generated) == 12
+    assert len(long_req.generated) == 2
+
+
+@pytest.mark.slow
+def test_serving_soak_chunked_eviction(served):
+    """Soak: random trace under tight pool pressure WITH chunked prefill
+    and the prefix cache — every scheduler op runs the internal
+    slot-leak `_check`, every request completes, blocks conserve."""
+    cfg, params, prompts, refs = served
+    from benchmarks.bench_serving import make_trace, replay
+    from repro.serving import ServingRuntime
+    rng = np.random.default_rng(43)
+    trace = make_trace(rng, n_requests=9, vocab=cfg.vocab, max_len=48)
+    rt = ServingRuntime(cfg, params, slots=3, max_len=48, page_block=8,
+                        page_blocks=10, prefill_chunk=3,
+                        prefix_cache=True)
+    summary = replay(rt, trace)
+    assert summary["requests"]["finished"] == len(trace)
+    assert summary["tokens_generated"] == sum(r["max_new"] for r in trace)
+    paged = rt.paged
+    assert paged.live_blocks + paged.free_block_count == paged.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants (hypothesis when installed)
+# ---------------------------------------------------------------------------
+
+from tests.conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prop_scheduler_fifo_and_no_dropped_tokens(seed):
+    """Random op soup, then drain.  Properties: (1) FIRST admissions
+    follow submission order exactly (FIFO; front-requeued evictees are
+    RE-admissions and exempt); (2) no generated token is ever dropped on
+    requeue — we feed each request the sequence 0,1,2,... and every
+    finished request must hold exactly range(max_new)."""
+    from repro.serving.scheduler import Scheduler
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(int(rng.integers(1, 4)))
+    submitted, first_admits = [], []
+
+    def admit():
+        for _, r in sched.admit():
+            if r.prefills == 1:
+                first_admits.append(r.rid)
+
+    def prefill_round(chunked):
+        for slot, r in sched.pending_prefill():
+            rem = len(r.prefill_tokens()) - sched.slots[slot].prefilled
+            c = int(rng.integers(1, rem + 1)) if chunked else rem
+            if c < rem:
+                sched.on_chunk(slot, c)
+            else:
+                sched.on_prefilled(slot, len(r.generated))
+
+    def decode_round():
+        for slot in list(sched.decode_slots()):
+            r = sched.slots[slot].request
+            sched.on_token(slot, len(r.generated))
+
+    for _ in range(60):
+        op = rng.integers(0, 5)
+        if op == 0 and len(submitted) < 12:
+            submitted.append(sched.submit(
+                [1] * int(rng.integers(1, 6)),
+                max_new=int(rng.integers(1, 4))))
+        elif op == 1:
+            admit()
+        elif op == 2:
+            prefill_round(chunked=True)
+        elif op == 3:
+            decode_round()
+        else:
+            v = sched.pick_victim()
+            if v is not None:
+                sched.evict(v)
+    while not sched.all_done:
+        admit()
+        prefill_round(chunked=False)
+        decode_round()
+    assert first_admits == [r.rid for r in submitted]
+    assert len(sched.finished) == len(submitted)
+    for r in sched.finished:
+        assert r.generated == list(range(r.max_new))
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_prop_paged_block_conservation(seed):
+    """Random alloc/free/share/adopt/CoW ops on a real pool: after every
+    op `live + free == n_blocks`, and releasing every reference at drain
+    returns every block to the free list (alloc == free)."""
+    from repro import configs
+    from repro.models import api
+    from repro.serving import PagedKV
+    cfg = configs.get_config("internlm2_1_8b", smoke=True)
+    model = api.get_model(cfg)
+    paged = PagedKV(cfg, model, 3, 32, block=8)
+    rng = np.random.default_rng(seed)
+    entries = []
+    for _ in range(40):
+        op = rng.integers(0, 6)
+        slot = int(rng.integers(0, 3))
+        if op == 0:
+            paged.ensure(slot, int(rng.integers(1, 33)))
+        elif op == 1:
+            paged.free_slot(slot)
+        elif op == 2 and int(paged.allocated[slot]):
+            n = int(rng.integers(1, int(paged.allocated[slot]) + 1))
+            entries.append(paged.share_blocks(slot, n))
+        elif op == 3 and entries:
+            paged.release_blocks(
+                entries.pop(int(rng.integers(0, len(entries)))))
+        elif op == 4 and entries and int(paged.allocated[slot]) == 0:
+            paged.adopt_blocks(
+                slot, entries[int(rng.integers(0, len(entries)))])
+        elif op == 5 and int(paged.allocated[slot]):
+            paged.cow_for_write(slot, [0])
+        assert paged.live_blocks + paged.free_block_count == paged.n_blocks
+    for s in range(3):
+        paged.free_slot(s)
+    while entries:
+        paged.release_blocks(entries.pop())
+    assert paged.free_block_count == paged.n_blocks
+    assert paged.live_blocks == 0
