@@ -154,7 +154,9 @@ def main(out_json: Optional[str] = None, quick: bool = False):
 
     from benchmarks import model_v5e
     from repro import configs
+    from repro.core import plan
     from repro.models import api
+    from repro.obs import registry as obs_registry
     from repro.serving import ServingRuntime
 
     engines = ["bf16", "ozimmu_h-4:df32"] if quick else \
@@ -187,6 +189,7 @@ def main(out_json: Optional[str] = None, quick: bool = False):
         modes += [("cached", None)]
         per_mode = {"legacy": {"tokens_per_s": useful / legacy_dt,
                                "seconds": legacy_dt}}
+        reg0 = obs_registry.get_registry().snapshot()
         for mode, presplit in modes:
             runtime = ServingRuntime(cfg, params, slots=SLOTS,
                                      max_len=MAX_LEN, presplit=presplit)
@@ -200,6 +203,46 @@ def main(out_json: Optional[str] = None, quick: bool = False):
             }
             assert summary["tokens_generated"] == useful, \
                 (summary["tokens_generated"], useful)
+
+        # observed emulation counters (trace-time registry diff over this
+        # engine's replays, plus the first decode step's capture): the
+        # per-weight int8-GEMM count the runtime actually executed, next
+        # to the Plan number it should execute.  Any divergence means the
+        # emulation ran contractions the cost accounting doesn't know
+        # about (or vice versa) — loud, not fatal: the bench still
+        # reports, the gate diffs the row.
+        observed = None
+        oz = cfg.engine.ozimmu_config
+        if oz is not None and runtime.decode_observed is not None:
+            dobs = runtime.decode_observed
+            n_frozen = (runtime.split_cache.stats.misses
+                        if runtime.split_cache is not None else 0)
+            per_weight_modeled = plan.plan_contraction(
+                oz, SLOTS, cfg.d_model, cfg.d_model).int8_gemms
+            modeled_step = n_frozen * per_weight_modeled
+            observed = {
+                "contractions_per_step": dobs["contractions"],
+                "int8_gemms_per_step": dobs["int8_gemms"],
+                "int8_gemms_presplit_per_step": dobs["int8_gemms_presplit"],
+                "int8_gemms_per_token": dobs["int8_gemms"] / SLOTS,
+                "presplit_weights": n_frozen,
+                "per_weight_gemms_observed":
+                    (dobs["int8_gemms_presplit"] / n_frozen)
+                    if n_frozen else None,
+                "per_weight_gemms_planned": per_weight_modeled,
+                "modeled_presplit_gemms_per_step": modeled_step,
+            }
+            if dobs["int8_gemms_presplit"] != modeled_step:
+                print(f"[serving] WARNING {spec}: observed presplit int8 "
+                      f"GEMMs/step {dobs['int8_gemms_presplit']:.0f} != "
+                      f"planned {modeled_step} "
+                      f"({n_frozen} weights x {per_weight_modeled})")
+            ediff = obs_registry.get_registry().snapshot().diff(reg0)
+            observed["engine_totals"] = {
+                name: ediff.total(name) for name in
+                ("emulation.calls", "emulation.int8_gemms",
+                 "emulation.highprec_adds", "emulation.split_bytes",
+                 "split_cache.hits", "split_cache.misses")}
 
         # prefix-cache TTFT on the shared-prompt trace (the system-prompt
         # regime): paged runtimes with the prefix cache off vs on.  The
@@ -245,10 +288,10 @@ def main(out_json: Optional[str] = None, quick: bool = False):
                 (per_mode["cached"]["split_cache"] or
                  {}).get("weight_split_hit_rate"),
             "prefix": prefix_row,
+            "observed_decode": observed,
         }
         # deterministic v5e decode-step phase model: weight-splitter
         # share with and without the split-cache
-        oz = cfg.engine.ozimmu_config
         if oz is not None:
             gemms = model_v5e.decode_weight_gemms(
                 4096, 11008, 32000, 32)       # full-size arch shapes
@@ -266,6 +309,14 @@ def main(out_json: Optional[str] = None, quick: bool = False):
                 "split_share_presplit": presplit_t["split_share"],
                 "step_speedup_presplit":
                     resplit["total"] / presplit_t["total"],
+                # paper-scale GEMM-call count per token: every projection
+                # of the full-size arch runs Plan-many int8 GEMMs
+                "full_arch_weight_gemms": len(gemms),
+                "full_arch_int8_gemms_per_token":
+                    len(gemms) * (observed["per_weight_gemms_planned"]
+                                  if observed else
+                                  plan.plan_contraction(
+                                      oz, SLOTS, 4096, 4096).int8_gemms),
             }
         rows.append(row)
         print(f"[serving] {spec}: legacy "
@@ -276,6 +327,14 @@ def main(out_json: Optional[str] = None, quick: bool = False):
                  if row["cached_over_uncached"] else "")
               + f"; prefix hit rate {prefix_row['hit_rate']:.2f}, "
                 f"TTFT x{ttft_ratio:.2f}")
+        if observed is not None:
+            print(f"[serving] {spec}: observed "
+                  f"{observed['int8_gemms_per_token']:.0f} int8 GEMMs/token "
+                  f"({observed['per_weight_gemms_observed']:.0f}/weight, "
+                  f"planned {observed['per_weight_gemms_planned']}); "
+                  f"full-size arch modeled "
+                  f"{row['modeled_decode']['full_arch_int8_gemms_per_token']}"
+                  f"/token")
 
     if out_json:
         with open(out_json, "w") as f:

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.splitting import Split, compute_r, sm_decode_slice
+from repro.obs import tracing as _tracing
 
 __all__ = [
     "int8_gemm",
@@ -254,22 +255,26 @@ def matmul_naive(sa: Split, sb: Split, *, accum: str = "f64",
     pairs = _term_pairs(k)
     gemm = pair_gemm_fn or (
         lambda s, t: int8_gemm(gemm_slice(sa, s - 1), gemm_slice(sb, t - 1)))
-    prods = _reduce_products([gemm(s, t) for s, t in pairs], product_reduce)
+    with _tracing.phase_scope("group_gemm"):
+        prods = _reduce_products([gemm(s, t) for s, t in pairs],
+                                 product_reduce)
 
     if accum == "df32":
         fn = scale_accum_fn or _scale_accum_df32
         acc = df32_zero(out_shape)
-        for (s, t), prod in zip(pairs, prods):
-            acc = fn(prod, sa.scale[s - 1].astype(jnp.float32),
-                     sb.scale[t - 1].astype(jnp.float32), acc)
+        with _tracing.phase_scope("scale_accum"):
+            for (s, t), prod in zip(pairs, prods):
+                acc = fn(prod, sa.scale[s - 1].astype(jnp.float32),
+                         sb.scale[t - 1].astype(jnp.float32), acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
     fn = scale_accum_fn or _scale_accum_plain
     c = jnp.zeros(out_shape, acc_dtype)
-    for (s, t), prod in zip(pairs, prods):
-        c = fn(prod, sa.scale[s - 1].astype(acc_dtype),
-               sb.scale[t - 1].astype(acc_dtype), c)
+    with _tracing.phase_scope("scale_accum"):
+        for (s, t), prod in zip(pairs, prods):
+            c = fn(prod, sa.scale[s - 1].astype(acc_dtype),
+                   sb.scale[t - 1].astype(acc_dtype), c)
     return c if partial else c.astype(out_dtype)
 
 
@@ -325,8 +330,9 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
         r = compute_r(n, beta)
     gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
     chunks = list(_group_chunks(k, r))
-    prods = _reduce_products([gg(pairs) for _, pairs in chunks],
-                             product_reduce)
+    with _tracing.phase_scope("group_gemm"):
+        prods = _reduce_products([gg(pairs) for _, pairs in chunks],
+                                 product_reduce)
 
     # The 2^(-beta*g) group exponent folds into the row scale (exact:
     # powers of two), matching the fused kernel's srow contract.
@@ -335,9 +341,10 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
         acc = df32_zero(out_shape)
         base_a = sa.base.astype(jnp.float32)
         base_b = sb.base.astype(jnp.float32)
-        for (g, _), prod in zip(chunks, prods):
-            e = jnp.asarray(2.0 ** (-beta * g), jnp.float32)
-            acc = fn(prod, base_a * e, base_b, acc)
+        with _tracing.phase_scope("scale_accum"):
+            for (g, _), prod in zip(chunks, prods):
+                e = jnp.asarray(2.0 ** (-beta * g), jnp.float32)
+                acc = fn(prod, base_a * e, base_b, acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
@@ -345,9 +352,10 @@ def matmul_group_ef(sa: Split, sb: Split, *, accum: str = "f64",
     c = jnp.zeros(out_shape, acc_dtype)
     base_a = sa.base.astype(acc_dtype)
     base_b = sb.base.astype(acc_dtype)
-    for (g, _), prod in zip(chunks, prods):
-        e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
-        c = fn(prod, base_a * e, base_b, c)
+    with _tracing.phase_scope("scale_accum"):
+        for (g, _), prod in zip(chunks, prods):
+            e = jnp.asarray(2.0 ** (-beta * g), acc_dtype)
+            c = fn(prod, base_a * e, base_b, c)
     return c if partial else c.astype(out_dtype)
 
 
@@ -552,8 +560,9 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
 
     gg = group_gemm_fn or (lambda pairs: group_gemm_concat(sa, sb, pairs))
     chunks = list(_oz2_chunks(k, r, fast))
-    prods = _reduce_products([gg(pairs) for _, pairs in chunks],
-                             product_reduce)
+    with _tracing.phase_scope("group_gemm"):
+        prods = _reduce_products([gg(pairs) for _, pairs in chunks],
+                                 product_reduce)
     windows = _ladder_windows(chunks, c)
 
     def fold(window):
@@ -579,18 +588,24 @@ def matmul_oz2(sa: Split, sb: Split, *, accum: str = "f64",
         fn = scale_accum_fn or _oz2_accum_df32
         acc = df32_zero(out_shape)
         for window in windows:
-            word, g_hi = fold(window)
-            acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi,
-                                      jnp.float32), acc)
-        acc = unscale(acc)
+            with _tracing.phase_scope("ladder"):
+                word, g_hi = fold(window)
+            with _tracing.phase_scope("scale_accum"):
+                acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi,
+                                          jnp.float32), acc)
+        with _tracing.phase_scope("scale_accum"):
+            acc = unscale(acc)
         return acc if partial else acc.to_float(out_dtype)
 
     acc_dtype = {"f64": jnp.float64, "f32": jnp.float32}[accum]
     fn = scale_accum_fn or _oz2_accum_plain
     acc = jnp.zeros(out_shape, acc_dtype)
     for window in windows:
-        word, g_hi = fold(window)
-        acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi, acc_dtype),
-                 acc)
-    acc = unscale(acc)
+        with _tracing.phase_scope("ladder"):
+            word, g_hi = fold(window)
+        with _tracing.phase_scope("scale_accum"):
+            acc = fn(word, _oz2_scale(sa.gbase, sb.gbase, beta, g_hi,
+                                      acc_dtype), acc)
+    with _tracing.phase_scope("scale_accum"):
+        acc = unscale(acc)
     return acc if partial else acc.astype(out_dtype)

@@ -75,11 +75,14 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import accumulate, splitting
+from repro.obs import registry as _obs
+from repro.obs import tracing as _tracing
 
 __all__ = ["OzimmuConfig", "VARIANTS", "ozimmu_matmul", "ozimmu_dot_general",
-           "parse_spec", "canonical_rhs"]
+           "parse_spec", "canonical_rhs", "variant_name"]
 
 DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
                          Tuple[Tuple[int, ...], Tuple[int, ...]]]
@@ -178,6 +181,56 @@ def digit_bits(cfg: "OzimmuConfig", beta: int) -> int:
     """Slice digit magnitude bits under ``cfg.split`` (sizes r / ladders);
     delegates to :func:`repro.core.splitting.digit_bits`."""
     return splitting.digit_bits(cfg.split, beta)
+
+
+_VARIANT_NAMES = {(v.split, v.accumulate): name
+                  for name, v in VARIANTS.items()}
+
+
+def variant_name(cfg: "OzimmuConfig") -> str:
+    """The ``VARIANTS`` name this config's (split, accumulate) pair maps
+    back to (``*_fast2`` splits resolve to their base variant; unknown
+    hand-built pairs fall back to ``split/accumulate``)."""
+    split = cfg.split[:-len("_fast2")] if cfg.split.endswith("_fast2") \
+        else cfg.split
+    return _VARIANT_NAMES.get((split, cfg.accumulate),
+                              f"{cfg.split}/{cfg.accumulate}")
+
+
+def _record_emulation(cfg: "OzimmuConfig", a, p: int,
+                      presplit: bool) -> None:
+    """Mirror one resolved contraction into the metrics registry.
+
+    Called from ``_bmm_impl`` after the config is fully canonical (fast2
+    tied, accumulator downgraded, auto-k resolved to a concrete k), so
+    the recorded counts are exactly what executes.  Host-side only: runs
+    once per eager call or per jit *trace* — a compiled step that traced
+    through here replays the same contraction on every execution, so
+    trace-time counts are per-execution counts.  Costs come from the
+    same ``Plan`` accounting the planner uses, which is what makes
+    observed == planned a testable invariant (tests/test_obs.py).
+    Shapes/dtypes only — never touches values, so tracers stay clean and
+    outputs are bitwise-identical with obs on or off.
+    """
+    from repro.core import plan as _plan
+    m, n = a.shape[-2], a.shape[-1]
+    # canonical operands share batch dims; b is (*batch, n, p)
+    batch = int(np.prod(a.shape[:-2], dtype=np.int64)) if a.ndim > 2 else 1
+    pl = _plan.plan_contraction(cfg, m, n, p)
+    labels = dict(
+        variant=variant_name(cfg), k=cfg.k,
+        path=("fused" if cfg.use_pallas == "fused"
+              else "pallas" if cfg.use_pallas else "xla"),
+        mesh=cfg.mesh_axis or "none", presplit=int(presplit))
+    reg = _obs.get_registry()
+    reg.inc("emulation.calls", 1, **labels)
+    reg.inc("emulation.int8_gemms", batch * pl.int8_gemms, **labels)
+    reg.inc("emulation.highprec_adds", batch * pl.highprec_adds, **labels)
+    itemsize = np.dtype(a.dtype).itemsize
+    split_elems = batch * m * n            # A is always split in-call;
+    if not presplit:                       # B only when no frozen Split
+        split_elems += batch * n * p
+    reg.inc("emulation.split_bytes", split_elems * itemsize, **labels)
 
 
 _MESH_REDUCES = ("int32", "df32")
@@ -335,9 +388,10 @@ def _bmm_local(a: jax.Array, b: jax.Array, cfg: OzimmuConfig, *,
     ``rhs_presplit`` (serving): B's frozen Split; the B-side splitter is
     skipped entirely and ``b`` may be ``None``.
     """
-    sa, sb = split_operands(a, b, cfg, n_total=n_total,
-                            rowmax_reduce=rowmax_reduce,
-                            rhs_presplit=rhs_presplit)
+    with _tracing.phase_scope("split"):
+        sa, sb = split_operands(a, b, cfg, n_total=n_total,
+                                rowmax_reduce=rowmax_reduce,
+                                rhs_presplit=rhs_presplit)
     group_gemm_fn = scale_accum_fn = pair_gemm_fn = unscale_fn = None
     if cfg.use_pallas:
         from repro.kernels import ops as kops  # lazy: kernels are optional
@@ -560,6 +614,8 @@ def _bmm_impl(a: jax.Array, b: jax.Array, cfg: OzimmuConfig,
             cfg = cfg.with_(k=_plan.auto_k(a, b, cfg), auto_k=False)
     if rhs_presplit is not None:
         _check_presplit(a, b.shape, cfg, rhs_presplit)
+    if _obs.enabled():
+        _record_emulation(cfg, a, b.shape[-1], rhs_presplit is not None)
     mesh = _mesh_for(cfg, a.shape[-1])
     if mesh is not None:
         return _bmm_sharded(a, b, cfg, mesh, rhs_presplit)

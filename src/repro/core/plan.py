@@ -105,7 +105,8 @@ from repro.core.splitting import beta_for, compute_r, digit_bits
 
 __all__ = ["DEFAULT_TARGET_EPS", "DEFAULT_DELTA", "Plan",
            "plan_contraction", "auto_k", "operand_gap_bits", "lambda_bits",
-           "kernel_blocks", "tile", "describe_config"]
+           "kernel_blocks", "tile", "describe_config",
+           "PlanDecision", "PlanLedger", "get_ledger", "choose_k_bits"]
 
 # ~f64-faithful: at or below the elementwise relative error a plain FP64
 # GEMM measures on the paper's phi-matrix grid (1e-11..7e-12 there), with
@@ -212,7 +213,24 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
              gap_a: Optional[int] = None, gap_b: Optional[int] = None,
              fast: Union[bool, str] = False, mode: str = "deterministic",
              delta: Optional[float] = None) -> int:
-    """Smallest k meeting ``target_eps`` under the bit model above.
+    """Smallest k meeting ``target_eps``; see :func:`choose_k_bits` for
+    the full bit model (this is its first return value)."""
+    return choose_k_bits(n, beta, target_eps, split=split,
+                         mantissa=mantissa, m=m, p=p, gap_a=gap_a,
+                         gap_b=gap_b, fast=fast, mode=mode, delta=delta)[0]
+
+
+def choose_k_bits(n: int, beta: int, target_eps: float, *, split: str,
+                  mantissa: int, m: int = 1, p: int = 1,
+                  gap_a: Optional[int] = None, gap_b: Optional[int] = None,
+                  fast: Union[bool, str] = False,
+                  mode: str = "deterministic",
+                  delta: Optional[float] = None) -> Tuple[int, int]:
+    """``(k, needed)``: the smallest k meeting ``target_eps`` under the
+    bit model above, plus the modeled bit requirement it covers (the
+    audit ledger's ``needed_bits`` — ``k * beta - needed`` is the
+    planner's slack at the resolved k, before :data:`K_MIN`/:data:`K_MAX`
+    clamping).
 
     ``gap_a``/``gap_b`` are the probed operand exponent ranges; ``None``
     means "no concrete operands" (traced call) and selects the static
@@ -294,7 +312,7 @@ def choose_k(n: int, beta: int, target_eps: float, *, split: str,
             needed = min(needed,
                          _bits_of(target_eps) + gaps + mp_prob
                          + (_clog2(n) + 1) // 2 + guard)
-    return _clamp_k(-(-needed // beta))
+    return _clamp_k(-(-needed // beta)), needed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +338,148 @@ class Plan:
                 f"{self.int8_gemms} int8 GEMMs, "
                 f"{self.highprec_adds} high-precision adds, "
                 f"blocks={self.blocks}")
+
+
+# ---------------------------------------------------------------------------
+# planner audit ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """One auto-k resolution, as the planner saw it (docs/observability.md).
+
+    ``predicted_eps`` is the bit model's achieved bound at the resolved
+    k: the target shifted by the slack bits ``k*beta - needed`` (negative
+    slack — a :data:`K_MAX` clamp — predicts an eps *above* target, which
+    is exactly the situation the ledger exists to surface)."""
+
+    source: str                # "contraction" (plan_contraction) |
+                               # "split_cache" (weight-freeze resolution)
+    spec: str                  # split/accumulate[/fast][@mesh] summary
+    mode: str                  # deterministic | probabilistic
+    delta: Optional[float]     # :prob failure budget (None when det)
+    target_eps: float
+    probed: bool               # concrete-operand probe vs static plan
+    m: int
+    n: int
+    p: int
+    gap_a: Optional[int]       # probed exponent ranges (None when static)
+    gap_b: Optional[int]
+    k: int                     # the chosen slice count
+    beta: int
+    needed_bits: int           # modeled requirement the k covers
+    predicted_eps: float
+    int8_gemms: int            # cost row at the resolved k
+    highprec_adds: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanLedger:
+    """Bounded, thread-safe ring of :class:`PlanDecision` rows.
+
+    Queryable (``entries()``, ``summary()``) and cheap to keep always-on:
+    recording is one deque append under a lock, and happens only when the
+    obs layer is enabled and only at plan-resolution time (eager calls
+    and jit traces — never per jitted execution)."""
+
+    def __init__(self, maxlen: int = 4096):
+        import collections
+        import threading
+        self._lock = threading.Lock()
+        self._ring = collections.deque(maxlen=maxlen)
+
+    def record(self, d: PlanDecision):
+        with self._lock:
+            self._ring.append(d)
+
+    def entries(self) -> list:
+        with self._lock:
+            return list(self._ring)
+
+    def clear(self):
+        with self._lock:
+            self._ring.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    def summary(self) -> dict:
+        """Aggregate view: decision counts by spec/mode/k, probe split,
+        worst predicted eps — the launch-time startup block."""
+        rows = self.entries()
+        by_spec: dict = {}
+        k_hist: dict = {}
+        for d in rows:
+            by_spec[d.spec] = by_spec.get(d.spec, 0) + 1
+            k_hist[d.k] = k_hist.get(d.k, 0) + 1
+        return {
+            "decisions": len(rows),
+            "probed": sum(1 for d in rows if d.probed),
+            "static": sum(1 for d in rows if not d.probed),
+            "probabilistic": sum(1 for d in rows
+                                 if d.mode == "probabilistic"),
+            "by_spec": dict(sorted(by_spec.items())),
+            "k_hist": {k: k_hist[k] for k in sorted(k_hist)},
+            "worst_predicted_eps": max(
+                (d.predicted_eps for d in rows), default=None),
+        }
+
+    def describe(self) -> str:
+        """One-line human summary for launch logging."""
+        s = self.summary()
+        if not s["decisions"]:
+            return "no auto-k decisions recorded"
+        ks = "/".join(f"k={k}x{c}" for k, c in s["k_hist"].items())
+        worst = s["worst_predicted_eps"]
+        return (f"{s['decisions']} auto-k decisions "
+                f"({s['probed']} probed, {s['static']} static"
+                + (f", {s['probabilistic']} :prob" if s['probabilistic']
+                   else "")
+                + f"): {ks}, worst predicted eps {worst:.2e}")
+
+
+_LEDGER = PlanLedger()
+
+
+def get_ledger() -> PlanLedger:
+    return _LEDGER
+
+
+def _spec_str(cfg, prob: bool) -> str:
+    fast = getattr(cfg, "fast", False)
+    mode = "/fast2" if fast == "fast2" else "/fast" if fast else ""
+    mesh = getattr(cfg, "mesh_axis", None)
+    return (f"{cfg.split}/{cfg.accumulate}{mode}:{cfg.accum_dtype}"
+            + (":prob" if prob else "")
+            + (f"@{mesh}" if mesh else ""))
+
+
+def record_decision(cfg, *, m: int, n: int, p: int, k: int, beta: int,
+                    needed: int, probed: bool,
+                    gap_a: Optional[int] = None,
+                    gap_b: Optional[int] = None,
+                    source: str = "contraction") -> None:
+    """Append one auto-k resolution to the ledger (and mirror a counter
+    into the metrics registry).  No-op when the obs layer is disabled."""
+    from repro.obs import registry as _obs
+    if not _obs.enabled():
+        return
+    eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
+    mode = getattr(cfg, "target_eps_mode", "deterministic")
+    cost = _plan_static(n, m, p, k, beta, *_cfg_cost_key(cfg, beta))
+    _LEDGER.record(PlanDecision(
+        source=source, spec=_spec_str(cfg, mode == "probabilistic"),
+        mode=mode, delta=getattr(cfg, "target_delta", None)
+        if mode == "probabilistic" else None,
+        target_eps=eps, probed=probed, m=m, n=n, p=p,
+        gap_a=gap_a, gap_b=gap_b, k=k, beta=beta, needed_bits=needed,
+        predicted_eps=math.ldexp(eps, needed - k * beta),
+        int8_gemms=cost.int8_gemms, highprec_adds=cost.highprec_adds))
+    _obs.get_registry().inc("plan.decisions", 1, source=source, mode=mode,
+                            probed=int(probed), k=k)
 
 
 @functools.lru_cache(maxsize=1024)
@@ -357,7 +517,7 @@ def _cfg_cost_key(cfg, beta: int) -> Tuple[str, bool, int, int]:
 
 
 def plan_contraction(cfg, m: int, n: int, p: int, *,
-                     a=None, b=None) -> Plan:
+                     a=None, b=None, _record: bool = True) -> Plan:
     """Resolve the execution plan for ``(m, n) @ (n, p)`` under ``cfg``
     (an :class:`repro.core.ozimmu.OzimmuConfig`).
 
@@ -383,11 +543,15 @@ def plan_contraction(cfg, m: int, n: int, p: int, *,
         gap_a = operand_gap_bits(a, axis=0)
         gap_b = operand_gap_bits(b, axis=1)
         probed = True
-    k = choose_k(n, beta, eps, split=cfg.split, mantissa=mantissa,
-                 m=m, p=p, gap_a=gap_a, gap_b=gap_b,
-                 fast=getattr(cfg, "fast", False),
-                 mode=getattr(cfg, "target_eps_mode", "deterministic"),
-                 delta=getattr(cfg, "target_delta", None))
+    k, needed = choose_k_bits(
+        n, beta, eps, split=cfg.split, mantissa=mantissa,
+        m=m, p=p, gap_a=gap_a, gap_b=gap_b,
+        fast=getattr(cfg, "fast", False),
+        mode=getattr(cfg, "target_eps_mode", "deterministic"),
+        delta=getattr(cfg, "target_delta", None))
+    if _record:
+        record_decision(cfg, m=m, n=n, p=p, k=k, beta=beta, needed=needed,
+                        probed=probed, gap_a=gap_a, gap_b=gap_b)
     base = _plan_static(n, m, p, k, beta, *_cfg_cost_key(cfg, beta))
     return dataclasses.replace(base, probed=probed)
 
@@ -453,7 +617,8 @@ def tile(dim: int, pref: int, mult: int) -> int:
 
 def describe_config(cfg, m: int = 4096, n: int = 4096, p: int = 4096) -> str:
     """One-line human plan summary for an engine config (launch logging)."""
-    pl = plan_contraction(cfg, m, n, p)
+    # _record=False: the 4096^3 illustration shape is not a real decision
+    pl = plan_contraction(cfg, m, n, p, _record=False)
     eps = cfg.target_eps if cfg.target_eps is not None else DEFAULT_TARGET_EPS
     prob = getattr(cfg, "target_eps_mode", "deterministic") \
         == "probabilistic"

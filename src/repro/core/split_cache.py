@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core import splitting
 from repro.core.splitting import Split
+from repro.obs import registry as _obs
 
 __all__ = ["SplitCache", "CacheStats", "resolved_k", "presplit_rhs",
            "split_nbytes"]
@@ -78,14 +79,20 @@ def resolved_k(cfg, n: int, dtype) -> int:
         return cfg.k
     from repro.core import plan
     mantissa = plan._MANTISSA.get(np.dtype(dtype), 24)
-    return plan.choose_k(n, splitting.beta_for(cfg.split, n),
-                         cfg.target_eps if cfg.target_eps is not None
-                         else plan.DEFAULT_TARGET_EPS,
-                         split=cfg.split, mantissa=mantissa,
-                         fast=getattr(cfg, "fast", False),
-                         mode=getattr(cfg, "target_eps_mode",
-                                      "deterministic"),
-                         delta=getattr(cfg, "target_delta", None))
+    beta = splitting.beta_for(cfg.split, n)
+    k, needed = plan.choose_k_bits(
+        n, beta,
+        cfg.target_eps if cfg.target_eps is not None
+        else plan.DEFAULT_TARGET_EPS,
+        split=cfg.split, mantissa=mantissa,
+        fast=getattr(cfg, "fast", False),
+        mode=getattr(cfg, "target_eps_mode", "deterministic"),
+        delta=getattr(cfg, "target_delta", None))
+    # m=p=0: the freeze-time resolution sees only the contraction length
+    plan.record_decision(cfg, m=0, n=n, p=0, k=k, beta=beta,
+                         needed=needed, probed=False,
+                         source="split_cache")
+    return k
 
 
 def presplit_rhs(b: jax.Array, dimension_numbers, cfg) -> Split:
@@ -229,6 +236,7 @@ class SplitCache:
             if entry is not None:
                 self.stats.hits += 1
                 self.stats.hit_bytes += in_bytes
+                self._obs_event("hits", hit_bytes=in_bytes)
                 return entry[0]
         bc_arr = b if np.dtype(b.dtype) == dtype else b.astype(dtype)
         sp = presplit_rhs(bc_arr, dnums, cfg)
@@ -243,13 +251,27 @@ class SplitCache:
             if entry is not None:
                 self.stats.hits += 1
                 self.stats.hit_bytes += in_bytes
+                self._obs_event("hits", hit_bytes=in_bytes)
                 return entry[0]
             if self._max is not None and len(self._entries) >= self._max:
                 self._evict_one_locked()
             self._entries[key] = (sp, nbytes, anchor)
             self.stats.misses += 1
             self.stats.cached_bytes += nbytes
+            self._obs_event("misses")
         return sp
+
+    def _obs_event(self, kind: str, hit_bytes: int = 0):
+        """Mirror one stats transition into the process-global registry
+        (cached_bytes rides along as a gauge).  The registry lock is a
+        leaf — safe under ``self._lock``."""
+        if not _obs.enabled():
+            return
+        reg = _obs.get_registry()
+        reg.inc(f"split_cache.{kind}", 1)
+        if hit_bytes:
+            reg.inc("split_cache.hit_bytes", hit_bytes)
+        reg.gauge("split_cache.cached_bytes", self.stats.cached_bytes)
 
     def _anchor(self, b, key):
         """A weakref that drops the entry when the array dies; falls back
@@ -270,6 +292,7 @@ class SplitCache:
                 self.stats.cached_bytes -= entry[1]
                 if invalidated:
                     self.stats.invalidations += 1
+                    self._obs_event("invalidations")
 
     def _evict_one_locked(self):
         key = next(iter(self._entries))

@@ -35,6 +35,7 @@ from repro.core.splitting import (Split, _geo_scales, _pow2_ceil,
 from repro.kernels import group_gemm as _gg
 from repro.kernels import scale_accum as _sa
 from repro.kernels import split_fused as _sf
+from repro.obs import tracing as _tracing
 
 # Flip to False when running on real TPUs.
 INTERPRET = True
@@ -129,9 +130,10 @@ def split_fused(a: jax.Array, k: int, beta: int, *, mode: str = "rn_const",
     bn = plan.tile(n, bn_pref, 128)
     a_p = _pad_to(a2, (bm, bn))
     inv_p = inv2 if const_grid else _pad_to(inv2, (bm, 1))
-    digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=kmode, bm=bm,
-                             bn=bn, const_grid=const_grid,
-                             interpret=INTERPRET)[:, :rows, :n]
+    with _tracing.phase_scope("kernel/split_fused"):
+        digits = _sf.split_fused(a_p, inv_p, k=k, beta=beta, mode=kmode,
+                                 bm=bm, bn=bn, const_grid=const_grid,
+                                 interpret=INTERPRET)[:, :rows, :n]
     digits = digits.reshape((k,) + batch + (m, n))
     return Split(digits, _geo_scales(base, beta, k), base, beta, 0,
                  gbase=gbase, signmag=(mode == "sm"))
@@ -167,7 +169,9 @@ def group_gemm(sa: Split, sb: Split, pairs: Sequence[Tuple[int, int]]
     bp = plan.tile(p, bp_pref, 128)
     a8 = _pad_to(a8, (1, 1, bm, bn))
     b8 = _pad_to(b8, (1, 1, bn, bp))
-    out = _gg.group_gemm(a8, b8, bm=bm, bp=bp, bn=bn, interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/group_gemm"):
+        out = _gg.group_gemm(a8, b8, bm=bm, bp=bp, bn=bn,
+                             interpret=INTERPRET)
     return out[:, :m, :p].reshape(batch + (m, p))
 
 
@@ -198,8 +202,9 @@ def scale_accum(p32: jax.Array, srow: jax.Array, scol: jax.Array,
     srow ``(*batch, m)``, scol ``(*batch, p)``."""
     p32_p, srow_p, scol_p, (hi_p, lo_p), bm, bp, unpad = \
         _epilogue_operands(p32, srow, scol, c_hi, c_lo)
-    hi, lo = _sa.scale_accum(p32_p, srow_p, scol_p, hi_p, lo_p, bm=bm,
-                             bp=bp, interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/scale_accum"):
+        hi, lo = _sa.scale_accum(p32_p, srow_p, scol_p, hi_p, lo_p, bm=bm,
+                                 bp=bp, interpret=INTERPRET)
     return unpad(hi), unpad(lo)
 
 
@@ -209,8 +214,9 @@ def scale_accum_plain(p32: jax.Array, srow: jax.Array, scol: jax.Array,
     :func:`scale_accum`."""
     p32_p, srow_p, scol_p, (c_p,), bm, bp, unpad = \
         _epilogue_operands(p32, srow, scol, c)
-    out = _sa.scale_accum_plain(p32_p, srow_p, scol_p, c_p, bm=bm, bp=bp,
-                                interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/scale_accum"):
+        out = _sa.scale_accum_plain(p32_p, srow_p, scol_p, c_p, bm=bm,
+                                    bp=bp, interpret=INTERPRET)
     return unpad(out)
 
 
@@ -253,8 +259,9 @@ def oz2_scale_accum(word: jax.Array, s: jax.Array, c_hi: jax.Array,
     compensated; word ``(*batch, m, p)`` int32, s ``(*batch,)`` f32."""
     word_p, s_p, (hi_p, lo_p), bm, bp, unpad = \
         _oz2_epilogue_operands(word, s, c_hi, c_lo)
-    hi, lo = _sa.scale_accum_const(word_p, s_p, hi_p, lo_p, bm=bm, bp=bp,
-                                   interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/scale_accum"):
+        hi, lo = _sa.scale_accum_const(word_p, s_p, hi_p, lo_p, bm=bm,
+                                       bp=bp, interpret=INTERPRET)
     return unpad(hi), unpad(lo)
 
 
@@ -262,8 +269,9 @@ def oz2_scale_accum_plain(word: jax.Array, s: jax.Array, c: jax.Array):
     """Fused oz2 plain epilogue (f64/f32 accumulator; word may be the
     int64 ladder word in f64/x64 mode)."""
     word_p, s_p, (c_p,), bm, bp, unpad = _oz2_epilogue_operands(word, s, c)
-    out = _sa.scale_accum_const_plain(word_p, s_p, c_p, bm=bm, bp=bp,
-                                      interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/scale_accum"):
+        out = _sa.scale_accum_const_plain(word_p, s_p, c_p, bm=bm, bp=bp,
+                                          interpret=INTERPRET)
     return unpad(out)
 
 
@@ -292,7 +300,9 @@ def oz2_unscale(x: jax.Array, ra: jax.Array, rb: jax.Array) -> jax.Array:
     x_p = _pad_to(x.reshape((B, m, p)), (1, bm, bp))
     ra_p = _pad_to(ra.reshape((B, m, 1)).astype(x.dtype), (1, bm, 1))
     rb_p = _pad_to(rb.reshape((B, 1, p)).astype(x.dtype), (1, 1, bp))
-    out = _sa.unscale(x_p, ra_p, rb_p, bm=bm, bp=bp, interpret=INTERPRET)
+    with _tracing.phase_scope("kernel/unscale"):
+        out = _sa.unscale(x_p, ra_p, rb_p, bm=bm, bp=bp,
+                          interpret=INTERPRET)
     return out[:, :m, :p].reshape(batch + (m, p))
 
 

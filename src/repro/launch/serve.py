@@ -29,6 +29,8 @@ from repro.distributed import compat
 from repro.distributed.sharding import use_rules
 from repro.launch.mesh import mesh_rules, parse_mesh_spec
 from repro.models import api
+from repro.obs import export as obs_export
+from repro.obs import tracing as obs_tracing
 from repro.serving import ServingRuntime
 
 
@@ -53,6 +55,25 @@ def slot_context(cfg, params, prompt_len: int):
         frames = jnp.zeros((1, prompt_len, cfg.d_model), jnp.float32)
         return encdec.encode(params, cfg, frames)
     return None
+
+
+def dump_metrics(path: str, runtime: ServingRuntime,
+                 final: bool = False) -> None:
+    """Write the unified metrics document (global registry merged with the
+    runtime's private serving registry, plus the plan ledger) to ``path``.
+    Final dumps embed the serving summary and decode-observed counters."""
+    snap = obs_export.unified_snapshot(runtime.metrics.registry)
+    extra = None
+    if final:
+        extra = {"serving_summary": runtime.metrics.summary()}
+        if runtime.decode_observed is not None:
+            extra["decode_observed"] = runtime.decode_observed
+    text = obs_export.to_json(snap, extra=extra)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text + "\n")
+    import os
+    os.replace(tmp, path)
 
 
 def main(argv=None):
@@ -87,6 +108,17 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="mesh spec: 'data=2,model=4', 'single_pod', "
                          "'multi_pod'; default no mesh (single device)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the unified metrics document (registry "
+                         "snapshot + plan ledger + serving summary) to "
+                         "PATH; with --metrics-every also periodically "
+                         "during the run")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="dump --metrics-json every N scheduler rounds "
+                         "(0 = final dump only)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax profiler trace of the serving "
+                         "loop into DIR (view with TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
     n_requests = args.requests if args.requests is not None else args.slots
 
@@ -113,13 +145,30 @@ def main(argv=None):
             st = runtime.split_cache.stats
             print(f"[serve] split-cache: froze {st.misses} weight splits "
                   f"({st.cached_bytes / 1e6:.2f} MB resident)")
+        from repro.core import plan as _plan
+        if len(_plan.get_ledger()):
+            print(f"[serve] planner: {_plan.get_ledger().describe()}")
         rng = np.random.default_rng(0)
         prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len,
                                 dtype=np.int32) for _ in range(n_requests)]
         t0 = time.time()
-        outs = runtime.generate(prompts, max_new=args.gen)
+        reqs = [runtime.submit(p, args.gen) for p in prompts]
+        with obs_tracing.profile(args.profile_dir):
+            rounds = 0
+            while runtime.step():
+                rounds += 1
+                if (args.metrics_json and args.metrics_every
+                        and rounds % args.metrics_every == 0):
+                    dump_metrics(args.metrics_json, runtime)
+        runtime.run()  # no rounds left; finalizes the metrics window
+        outs = [np.concatenate([r.prompt,
+                                np.asarray(r.generated, np.int32)])
+                for r in reqs]
         dt = time.time() - t0
     s = runtime.metrics.summary()
+    if args.metrics_json:
+        dump_metrics(args.metrics_json, runtime, final=True)
+        print(f"[serve] metrics written to {args.metrics_json}")
     print(f"[serve] {args.arch}: {s['tokens_generated']} tokens from "
           f"{s['requests']['finished']} requests in {dt:.2f}s "
           f"({s['tokens_per_s']:.1f} tok/s, slots={args.slots}, "
@@ -140,6 +189,13 @@ def main(argv=None):
         print(f"[serve] prefix-cache: hit rate {pc['hit_rate']:.2f} "
               f"({pc['hit_tokens']} prefill tokens aliased, "
               f"{pc['entries']} entries)")
+    if runtime.decode_observed is not None:
+        obs = runtime.decode_observed
+        print(f"[serve] observed per decode step: "
+              f"{obs['contractions']:.0f} contractions, "
+              f"{obs['int8_gemms']:.0f} int8 GEMMs "
+              f"({obs['int8_gemms_presplit']:.0f} on presplit weights), "
+              f"{obs['highprec_adds']:.0f} high-precision adds")
     print("[serve] sample continuation:",
           outs[0][-args.gen:][:16].tolist())
     return s

@@ -36,7 +36,8 @@ def train(arch: str, *, smoke: bool = True, n_steps: int = 100,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
           microbatches: int = 1, engine: str = "bf16",
           mesh=None, seed: int = 0, log_every: int = 10,
-          lr: float = 3e-3, print_fn=print):
+          lr: float = 3e-3, profile_dir: Optional[str] = None,
+          print_fn=print):
     cfg = configs.get_config(arch, smoke=smoke, engine_spec=engine)
     oz_cfg = cfg.engine.ozimmu_config
     if oz_cfg is not None:
@@ -76,23 +77,31 @@ def train(arch: str, *, smoke: bool = True, n_steps: int = 100,
             S.make_train_step(cfg, opt_cfg, tcfg, opt_axes=opt_axes),
             donate_argnums=(0,))
 
+        from repro.core import plan as _plan
+        from repro.obs import tracing as _tracing
         losses = []
         t0 = time.time()
-        for step in range(start_step, n_steps):
-            batch = {k: jnp.asarray(v) for k, v in
-                     pipe.batch_at(step).items()}
-            state, metrics = train_step(state, batch)
-            losses.append(float(metrics["loss"]))
-            if log_every and (step + 1) % log_every == 0:
-                dt = (time.time() - t0) / log_every
-                print_fn(f"[train] step {step + 1:5d}  "
-                         f"loss {losses[-1]:.4f}  "
-                         f"gnorm {float(metrics['grad_norm']):.3f}  "
-                         f"lr {float(metrics['lr']):.2e}  "
-                         f"{dt * 1e3:.0f} ms/step")
-                t0 = time.time()
-            if ckpt and (step + 1) % ckpt_every == 0:
-                ckpt.save(step + 1, state)
+        with _tracing.profile(profile_dir):
+            for step in range(start_step, n_steps):
+                batch = {k: jnp.asarray(v) for k, v in
+                         pipe.batch_at(step).items()}
+                state, metrics = train_step(state, batch)
+                losses.append(float(metrics["loss"]))
+                if step == start_step and len(_plan.get_ledger()):
+                    # the first step traced every contraction: the ledger
+                    # now holds one row per auto-k decision of the program
+                    print_fn(f"[train] planner: "
+                             f"{_plan.get_ledger().describe()}")
+                if log_every and (step + 1) % log_every == 0:
+                    dt = (time.time() - t0) / log_every
+                    print_fn(f"[train] step {step + 1:5d}  "
+                             f"loss {losses[-1]:.4f}  "
+                             f"gnorm {float(metrics['grad_norm']):.3f}  "
+                             f"lr {float(metrics['lr']):.2e}  "
+                             f"{dt * 1e3:.0f} ms/step")
+                    t0 = time.time()
+                if ckpt and (step + 1) % ckpt_every == 0:
+                    ckpt.save(step + 1, state)
         if ckpt:
             ckpt.save(n_steps, state, blocking=True)
     return state, losses
@@ -118,13 +127,16 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax profiler trace of the training "
+                         "loop into DIR (view with TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
     _, losses = train(args.arch, smoke=args.smoke, n_steps=args.steps,
                       global_batch=args.batch, seq_len=args.seq,
                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                       microbatches=args.microbatches, engine=args.engine,
                       mesh=parse_mesh_spec(args.mesh),
-                      lr=args.lr)
+                      lr=args.lr, profile_dir=args.profile_dir)
     k = max(1, len(losses) // 10)
     print(f"[train] first-{k} mean loss {np.mean(losses[:k]):.4f}  "
           f"last-{k} mean loss {np.mean(losses[-k:]):.4f}")

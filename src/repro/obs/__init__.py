@@ -1,0 +1,14 @@
+"""Observability layer: metrics registry, profiler tracing, exporters.
+
+The package is import-light on purpose — ``repro.obs.registry`` pulls in
+nothing outside the standard library, so core modules can record metrics
+without creating import cycles.  See docs/observability.md.
+"""
+
+from repro.obs.registry import (  # noqa: F401
+    MetricsRegistry,
+    Snapshot,
+    enabled,
+    get_registry,
+    set_enabled,
+)

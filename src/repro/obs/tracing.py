@@ -1,0 +1,82 @@
+"""Profiler tracing: named emulation phases + run-level trace capture.
+
+Two scope flavors, both no-ops when the obs layer is disabled:
+
+* :func:`phase_scope` — ``jax.named_scope``: attaches a name to the ops
+  staged under it, so xprof/Perfetto shows ``ozimmu/split``,
+  ``ozimmu/group_gemm``, ``ozimmu/ladder``, ``ozimmu/scale_accum``
+  blocks inside the compiled program.  Pure metadata: the lowered HLO
+  computes the same values in the same order, which keeps the bitwise
+  contract (tests assert identity with obs on vs off).  Works for both
+  the XLA path and the fused Pallas pipeline — the kernel calls are
+  staged under the same scopes.
+* :func:`host_scope` — ``jax.profiler.TraceAnnotation``: brackets *host*
+  work (splitter dispatch, cache freezes) on the profiler timeline.
+
+Run-level capture: :func:`profile` brackets a whole run with
+``jax.profiler.start_trace/stop_trace`` (the ``--profile-dir`` flag on
+serve/train).  Failures to start the profiler degrade to a warning, not
+a crash — observability must never take the workload down.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import sys
+from typing import Optional
+
+import jax
+
+from repro.obs import registry as _registry
+
+__all__ = ["phase_scope", "host_scope", "profile", "PHASES"]
+
+# The emulation pipeline's phase names (docs/observability.md): every
+# scope this module emits is ozimmu/<one of these>.
+PHASES = ("split", "group_gemm", "ladder", "scale_accum")
+
+_NULL = contextlib.nullcontext()
+
+
+def phase_scope(name: str):
+    """In-graph scope naming the ops staged under it (trace-time only;
+    compiled executions carry the name for free)."""
+    if not _registry.enabled():
+        return _NULL
+    return jax.named_scope(f"ozimmu/{name}")
+
+
+def host_scope(name: str):
+    """Host-side profiler annotation (shows up on the python thread's
+    timeline during an active trace)."""
+    if not _registry.enabled():
+        return _NULL
+    try:
+        return jax.profiler.TraceAnnotation(f"ozimmu/{name}")
+    except Exception:  # profiler backend unavailable
+        return _NULL
+
+
+@contextlib.contextmanager
+def profile(trace_dir: Optional[str]):
+    """Bracket a run with ``jax.profiler.start_trace/stop_trace`` when
+    ``trace_dir`` is set; plain passthrough when None."""
+    if not trace_dir:
+        yield
+        return
+    started = False
+    try:
+        jax.profiler.start_trace(trace_dir)
+        started = True
+    except Exception as e:  # missing profiler deps / double start
+        print(f"[obs] profiler trace unavailable ({e}); continuing "
+              f"without", file=sys.stderr)
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:
+                print(f"[obs] profiler stop_trace failed ({e})",
+                      file=sys.stderr)

@@ -1,44 +1,102 @@
 """Serving metrics: tokens/s, TTFT, queue depth, split-cache savings.
 
-Counters are plain host-side Python updated by the runtime loop; the
-summary is one JSON-able dict so the bench harness and the serve driver
-report the same numbers.
+Rebased onto :class:`repro.obs.registry.MetricsRegistry`: every counter
+and distribution lives in a **private** registry instance (names under
+``serving.*``), and the public :meth:`ServingMetrics.summary` dict is a
+view over it.  Private, not the process-global one, because summaries
+are per-measurement-window: tests and benches interleave several
+runtimes (and call ``reset_metrics`` between passes), and their numbers
+must never bleed into each other.  The unified export merges this
+registry with the global one (``repro.obs.export.unified_snapshot``).
+
+Counters are host-side, updated by the runtime loop; the summary is one
+JSON-able dict so the bench harness and the serve driver report the
+same numbers.  Percentiles are linear-interpolation
+(:func:`repro.obs.registry.percentile`), exact at small N — the old
+nearest-rank-with-rounding skewed high there (p50 of [1,2,3,4] was 3).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.obs.registry import MetricsRegistry, hist_stats, percentile
+
 __all__ = ["ServingMetrics"]
 
+_COUNTERS = ("requests_submitted", "requests_finished", "tokens_generated",
+             "prefill_tokens", "decode_steps", "prefill_calls",
+             "prefill_chunks", "evictions")
 
-def _pct(sorted_vals: List[float], q: float) -> Optional[float]:
-    if not sorted_vals:
-        return None
-    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
-    return sorted_vals[idx]
+# per-round timing histograms (seconds), recorded by the runtime loop
+TIMING_HISTS = ("decode_step", "prefill_call", "eviction", "cow_copy")
 
 
-@dataclasses.dataclass
+def _counter(name: str):
+    key = f"serving.{name}"
+
+    def get(self) -> int:
+        return int(self.registry.value(key))
+
+    def set_(self, value: int):
+        self.registry.inc(key, value - self.registry.value(key))
+
+    return property(get, set_)
+
+
 class ServingMetrics:
-    now: Any = time.monotonic         # injectable clock (virtual-time tests)
+    """One measurement window's serving counters over a private registry.
 
-    started_at: Optional[float] = None
-    stopped_at: Optional[float] = None
-    requests_submitted: int = 0
-    requests_finished: int = 0
-    tokens_generated: int = 0
-    prefill_tokens: int = 0
-    decode_steps: int = 0
-    prefill_calls: int = 0
-    prefill_chunks: int = 0           # non-final chunk calls (chunked mode)
-    evictions: int = 0
-    ttft: List[float] = dataclasses.field(default_factory=list)
-    latency: List[float] = dataclasses.field(default_factory=list)
-    queue_depth_samples: List[int] = dataclasses.field(default_factory=list)
-    split_cache: Optional[Dict[str, Any]] = None
-    prefix_cache: Optional[Dict[str, Any]] = None
+    The constructor keeps the historical dataclass-style signature
+    (``ServingMetrics(now=...)``); counters read/write through the
+    registry so ``m.decode_steps += 1`` works unchanged."""
+
+    def __init__(self, now=time.monotonic,
+                 registry: Optional[MetricsRegistry] = None):
+        self.now = now                  # injectable clock (virtual-time
+                                        # tests share it with the registry)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(now=now)
+        self.started_at: Optional[float] = None
+        self.stopped_at: Optional[float] = None
+        self.split_cache: Optional[Dict[str, Any]] = None
+        self.prefix_cache: Optional[Dict[str, Any]] = None
+
+    requests_submitted = _counter("requests_submitted")
+    requests_finished = _counter("requests_finished")
+    tokens_generated = _counter("tokens_generated")
+    prefill_tokens = _counter("prefill_tokens")
+    decode_steps = _counter("decode_steps")
+    prefill_calls = _counter("prefill_calls")
+    prefill_chunks = _counter("prefill_chunks")  # non-final chunk calls
+    evictions = _counter("evictions")
+
+    # -- distributions ---------------------------------------------------
+
+    @property
+    def ttft(self) -> List[float]:
+        return list(self.registry.hist_values("serving.ttft_s"))
+
+    @property
+    def latency(self) -> List[float]:
+        return list(self.registry.hist_values("serving.latency_s"))
+
+    @property
+    def queue_depth_samples(self) -> List[int]:
+        return [int(v) for v in
+                self.registry.hist_values("serving.queue_depth")]
+
+    def observe_timing(self, phase: str, seconds: float):
+        """One per-round phase timing (``phase`` in :data:`TIMING_HISTS`:
+        decode_step / prefill_call / eviction / cow_copy)."""
+        self.registry.observe(f"serving.{phase}_s", seconds)
+
+    def timer(self, phase: str):
+        """Context manager recording its elapsed time as
+        :meth:`observe_timing` (uses the injectable clock)."""
+        return self.registry.timer(f"serving.{phase}_s")
+
+    # -- lifecycle -------------------------------------------------------
 
     def start(self):
         if self.started_at is None:
@@ -61,16 +119,27 @@ class ServingMetrics:
     def record_finish(self, req, end_time: float):
         self.requests_finished += 1
         if req.first_token_at is not None:
-            self.ttft.append(req.first_token_at - req.arrival)
-        self.latency.append(end_time - req.arrival)
+            self.registry.observe("serving.ttft_s",
+                                  req.first_token_at - req.arrival)
+        self.registry.observe("serving.latency_s", end_time - req.arrival)
 
     def sample_queue(self, depth: int):
-        self.queue_depth_samples.append(int(depth))
+        self.registry.observe("serving.queue_depth", int(depth))
+
+    # -- the public view -------------------------------------------------
 
     def summary(self) -> Dict[str, Any]:
-        ttft = sorted(self.ttft)
-        lat = sorted(self.latency)
+        ttft = self.ttft
+        lat = self.latency
         qd = self.queue_depth_samples
+        timings = {}
+        for phase in TIMING_HISTS:
+            stats = hist_stats(
+                self.registry.hist_values(f"serving.{phase}_s"))
+            if stats is not None:
+                timings[phase] = {k: stats[k] for k in
+                                  ("count", "mean", "p50", "p95", "p99",
+                                   "max")}
         return {
             "requests": {"submitted": self.requests_submitted,
                          "finished": self.requests_finished},
@@ -83,11 +152,22 @@ class ServingMetrics:
             "elapsed_s": round(self.elapsed, 4),
             "tokens_per_s": round(self.tokens_per_s, 2),
             "ttft_s": {"mean": (sum(ttft) / len(ttft)) if ttft else None,
-                       "p50": _pct(ttft, 0.5), "p95": _pct(ttft, 0.95)},
+                       "p50": _pct(ttft, 0.5), "p95": _pct(ttft, 0.95),
+                       "p99": _pct(ttft, 0.99)},
             "latency_s": {"mean": (sum(lat) / len(lat)) if lat else None,
-                          "p95": _pct(lat, 0.95)},
+                          "p95": _pct(lat, 0.95), "p99": _pct(lat, 0.99)},
             "queue_depth": {"max": max(qd) if qd else 0,
-                            "mean": (sum(qd) / len(qd)) if qd else 0.0},
+                            "mean": (sum(qd) / len(qd)) if qd else 0.0,
+                            "p95": _pct(qd, 0.95) if qd else 0.0},
+            "timings_s": timings,
             "split_cache": self.split_cache,
             "prefix_cache": self.prefix_cache,
         }
+
+
+def _pct(vals: List[float], q: float) -> Optional[float]:
+    """Linear-interpolation percentile, None on empty input (the summary
+    contract for windows that finished no requests)."""
+    if not vals:
+        return None
+    return percentile(vals, q)

@@ -52,6 +52,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.split_cache import _mesh_key
+from repro.obs import registry as _obs
 from repro.serving.kvcache import PagedKV
 
 __all__ = ["PrefixCache", "PrefixEntry", "PrefixStats", "config_key"]
@@ -138,9 +139,15 @@ class PrefixCache:
                 e.hits += 1
                 self.stats.hits += 1
                 self.stats.hit_tokens += m
+                if _obs.enabled():
+                    reg = _obs.get_registry()
+                    reg.inc("prefix_cache.hits", 1)
+                    reg.inc("prefix_cache.hit_tokens", m)
                 return e
             m -= self.block
         self.stats.misses += 1
+        if _obs.enabled():
+            _obs.get_registry().inc("prefix_cache.misses", 1)
         return None
 
     def adopt(self, slot: int, entry: PrefixEntry) -> int:
@@ -176,6 +183,8 @@ class PrefixCache:
             self.entries[key] = PrefixEntry(key, length, blocks, state)
             inserted += 1
             self.stats.inserted += 1
+            if _obs.enabled():
+                _obs.get_registry().inc("prefix_cache.inserted", 1)
         while len(self.entries) > self.max_entries:
             self.release_one()
         return inserted
@@ -191,6 +200,8 @@ class PrefixCache:
         _, e = self.entries.popitem(last=False)
         self.paged.release_blocks(e.blocks)
         self.stats.evicted += 1
+        if _obs.enabled():
+            _obs.get_registry().inc("prefix_cache.evicted", 1)
         return True
 
     def clear(self):

@@ -55,6 +55,7 @@ from repro.distributed.sharding import use_rules
 from repro.models import api
 from repro.serving import presplit as presplit_mod
 from repro.serving.kvcache import PagedKV, SlotCacheOps, STATE_DESCRIPTORS
+from repro.obs import registry as _obs
 from repro.serving.metrics import ServingMetrics
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
@@ -126,6 +127,11 @@ class ServingRuntime:
         self.ops = SlotCacheOps(cfg, self.model)
         self.metrics = ServingMetrics(now=now)
         self._now = now
+        # trace-time emulation counts of ONE decode step (captured around
+        # the first, compiling, decode call — a compiled step replays the
+        # same contractions every execution).  None until a step traced
+        # with obs enabled; persists across reset_metrics.
+        self.decode_observed: Optional[Dict[str, float]] = None
 
         batch_ctx = None if ctx is None else jnp.concatenate(
             [ctx] * slots, axis=0)
@@ -282,14 +288,18 @@ class ServingRuntime:
         """Free pool blocks: LRU prefix entries go first (cache entries
         are cheaper to lose than live progress), then the scheduler
         preempts a slot.  False when ``protect`` itself was evicted."""
-        if self.prefix is not None and self.prefix.release_one():
-            return True
-        victim = self.sched.pick_victim(protect=protect)
-        if victim is None:
-            victim = protect        # nothing else to take — preempt self
-        self.sched.evict(victim)
-        self.paged.free_slot(victim)
-        return victim != protect
+        t0 = self._now()
+        try:
+            if self.prefix is not None and self.prefix.release_one():
+                return True
+            victim = self.sched.pick_victim(protect=protect)
+            if victim is None:
+                victim = protect    # nothing else to take — preempt self
+            self.sched.evict(victim)
+            self.paged.free_slot(victim)
+            return victim != protect
+        finally:
+            self.metrics.observe_timing("eviction", self._now() - t0)
 
     def _alloc_or_evict(self, slot: int, length: int) -> bool:
         """Paged block allocation with eviction pressure; False when the
@@ -305,10 +315,16 @@ class ServingRuntime:
         """Copy-on-write with eviction pressure (a copy needs one free
         block); False when the requesting slot itself was evicted."""
         block_idxs = list(block_idxs)
-        while not self.paged.cow_for_write(slot, block_idxs):
-            if not self._pool_pressure(slot):
-                return False
-        return True
+        copies0 = self.paged.cow_copies
+        t0 = self._now()
+        try:
+            while not self.paged.cow_for_write(slot, block_idxs):
+                if not self._pool_pressure(slot):
+                    return False
+            return True
+        finally:
+            if self.paged.cow_copies > copies0:
+                self.metrics.observe_timing("cow_copy", self._now() - t0)
 
     # -- admission -------------------------------------------------------
 
@@ -400,6 +416,7 @@ class ServingRuntime:
                 start[slot] = Lb - clen
                 base[slot] = done
                 newmask[slot] = True
+            t0 = self._now()
             if self.paged is not None:
                 fn = self._prefill_paged_fn(Lb)
                 nxt, after = fn(self.params, self.paged.pool,
@@ -422,6 +439,7 @@ class ServingRuntime:
             nxt = np.asarray(nxt)
             now = self._now()
             self.metrics.prefill_calls += 1
+            self.metrics.observe_timing("prefill_call", now - t0)
             # every scanned position consumes every frozen weight split
             self._avoided_split_bytes += Lb * self._wrapped_bytes
             for slot, req, clen in ready:
@@ -488,6 +506,10 @@ class ServingRuntime:
         # idle slots = "write nothing" (cache_update_row no-op)
         cur = np.where(active, self._cur, 0).astype(np.int32)
         toks = self._last_tok[:, None].astype(np.int32)
+        cap = None
+        if self.decode_observed is None and _obs.enabled():
+            cap = _obs.get_registry().snapshot()
+        t0 = self._now()
         if self.paged is not None:
             nxt, pool, state = self._decode_paged(
                 self.params, self.paged.pool, self.paged.state,
@@ -500,7 +522,17 @@ class ServingRuntime:
                 jnp.asarray(cur), jnp.asarray(active))
         nxt = np.asarray(nxt)
         now = self._now()
+        if cap is not None:
+            d = _obs.get_registry().snapshot().diff(cap)
+            self.decode_observed = {
+                "contractions": d.total("emulation.calls"),
+                "int8_gemms": d.total("emulation.int8_gemms"),
+                "int8_gemms_presplit": d.total("emulation.int8_gemms",
+                                               presplit=1),
+                "highprec_adds": d.total("emulation.highprec_adds"),
+            }
         self.metrics.decode_steps += 1
+        self.metrics.observe_timing("decode_step", now - t0)
         self._avoided_split_bytes += self._wrapped_bytes
         for slot in active_idx:
             req = self.sched.slots[slot].request

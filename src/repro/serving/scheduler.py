@@ -80,9 +80,14 @@ class Slot:
     last_token: int = 0                 # next token to feed the decode step
     admit_seq: int = -1                 # admission order (eviction picks max)
     prefilled: int = 0                  # prefill tokens already in the cache
-    #   (< len(prefill_tokens()) means mid-chunked-prefill: the slot is
-    #    occupied but must NOT decode yet; a prefix-cache hit starts it
-    #    above zero — the aliased positions never run a forward pass)
+    #   (< prefill_target means mid-chunked-prefill: the slot is occupied
+    #    but must NOT decode yet; a prefix-cache hit starts it above zero
+    #    — the aliased positions never run a forward pass)
+    prefill_target: int = 0             # len(prefill_tokens()) AT ADMISSION
+    #   (frozen: prefill_tokens() itself grows as the slot decodes, so
+    #    comparing against it live would keep the slot prefill-pending
+    #    forever and push every generated token through a 1-token
+    #    prefill chunk instead of the decode step)
 
     @property
     def free(self) -> bool:
@@ -91,7 +96,7 @@ class Slot:
     @property
     def prefill_done(self) -> bool:
         return self.request is not None and \
-            self.prefilled >= len(self.request.prefill_tokens())
+            self.prefilled >= self.prefill_target
 
 
 class Scheduler:
@@ -150,7 +155,9 @@ class Scheduler:
                 req = self.queue.popleft()
                 req.prefills += 1
                 self.slots[i] = Slot(request=req, pos=0,
-                                     admit_seq=next(self._admit_seq))
+                                     admit_seq=next(self._admit_seq),
+                                     prefill_target=len(
+                                         req.prefill_tokens()))
                 admissions.append((i, req))
         self._check()
         return admissions
@@ -190,7 +197,7 @@ class Scheduler:
         slot = self.slots[slot_idx]
         assert slot.request is not None, f"slot {slot_idx} is free"
         slot.prefilled += int(n)
-        assert slot.prefilled < len(slot.request.prefill_tokens()), \
+        assert slot.prefilled < slot.prefill_target, \
             "final chunk must go through on_prefilled"
         self._check()
 
@@ -203,7 +210,7 @@ class Scheduler:
         Returns True when that token already finished the request."""
         slot = self.slots[slot_idx]
         assert slot.request is not None, f"slot {slot_idx} is free"
-        slot.pos = len(slot.request.prefill_tokens())
+        slot.pos = slot.prefill_target
         slot.prefilled = slot.pos
         return self._accept_token(slot_idx, first_token, now)
 
